@@ -1,0 +1,39 @@
+"""Shared benchmark helpers: timing, CSV emission, standard fixtures."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ROWS: list[dict] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """Record + print one CSV row: name,us_per_call,derived."""
+    ROWS.append({"name": name, "us": us_per_call, "derived": derived})
+    print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def time_jitted(fn: Callable, *args, iters: int = 20, warmup: int = 2) -> float:
+    """Median wall-time per call (seconds) of an already-jitted function."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def zipf_logits(B: int, V: int, s: float = 1.1, noise: float = 0.6,
+                seed: int = 0) -> jnp.ndarray:
+    """Realistic next-token logits: Zipf-rank base + per-row noise."""
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, V + 1)
+    base = -s * np.log(ranks)
+    z = base[None, :] + rng.normal(0, noise, (B, V))
+    return jnp.asarray(z.astype(np.float32))

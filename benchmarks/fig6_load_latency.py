@@ -1,0 +1,29 @@
+"""Fig. 6: load–latency tradeoff — arrival-rate sweep, throughput vs P99
+TPOT, baseline vs SIMPLE (pipeline simulator at H100/Qwen3-235B scale)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from benchmarks.pipeline_sim import SimConfig, simulate
+
+
+def run(emit_fn=emit) -> None:
+    for rate in (1, 16, 64, 128, float("inf")):
+        label = "inf" if np.isinf(rate) else str(rate)
+        kw = dict(num_stages=4, t_stage=11e-3, t_sampling_gpu=5.5e-3,
+                  t_sampler_row=0.25e-3, arrival_rate=rate, num_requests=256,
+                  tokens_per_request=24)
+        b = simulate(SimConfig(**kw), "baseline")
+        s = simulate(SimConfig(**kw), "simple")
+        emit_fn(f"fig6.load_latency.rate_{label}",
+                s.tpot_p99 * 1e6,
+                f"baseline: {b.throughput:.0f}tok/s p99={b.tpot_p99 * 1e3:.0f}ms"
+                f" | simple: {s.throughput:.0f}tok/s "
+                f"p99={s.tpot_p99 * 1e3:.0f}ms "
+                f"(+{s.throughput / b.throughput - 1:.0%} thr, "
+                f"{1 - s.tpot_p99 / b.tpot_p99:.0%} p99 cut)")
+
+
+if __name__ == "__main__":
+    run()

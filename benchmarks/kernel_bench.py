@@ -1,0 +1,67 @@
+"""Kernel-level benchmark: fused Pallas decision-plane kernels vs unfused
+jnp pipelines — wall time (interpret mode is slow; the HLO byte counts are
+the architecture-relevant numbers) plus analytic HBM-traffic accounting.
+
+Derived column reports bytes-per-token-decision: the decision plane is
+memory-bound (paper §2.1: O(1) FLOPs/byte), so HBM passes ARE the roofline.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_jitted, zipf_logits
+from repro.kernels import ref
+
+B, V = 32, 151_936
+
+
+def hbm_passes_unfused() -> float:
+    """Baseline pipeline reads/writes of the (B, V) logits tensor:
+    penalties (3 passes: rep, pres, freq) + temperature + max + exp-sums +
+    tail max = 7 reads + 2 writes (approx)."""
+    return 9.0
+
+
+def hbm_passes_fused() -> float:
+    """penalty kernel (1 read + 1 write) + shvs mass kernel (1 read)."""
+    return 3.0
+
+
+def run(emit_fn=emit) -> None:
+    z = zipf_logits(B, V)
+    cp = jnp.zeros((B, V), jnp.int32)
+    co = jnp.zeros((B, V), jnp.int32)
+    rep = jnp.full((B,), 1.1)
+    pres = jnp.full((B,), 0.1)
+    freq = jnp.full((B,), 0.1)
+    temp = jnp.full((B,), 0.8)
+    hot = jnp.asarray(np.arange(V) < 16384)
+
+    # oracles as the unfused jnp pipeline (what XLA would run without fusion
+    # control), timed on CPU
+    t_pen = time_jitted(jax.jit(ref.penalty_ref), z, cp, co, rep, pres, freq,
+                        temp, iters=5)
+    t_mass = time_jitted(jax.jit(ref.shvs_mass_ref), z, hot, iters=5)
+    t_gum = time_jitted(jax.jit(ref.gumbel_argmax_ref), z, 7, iters=5)
+
+    bytes_bv = B * V * 4
+    emit_fn("kernel.penalty_ref_cpu", t_pen * 1e6,
+            f"{bytes_bv / t_pen / 1e9:.1f} GB/s effective")
+    emit_fn("kernel.shvs_mass_ref_cpu", t_mass * 1e6,
+            f"{bytes_bv / t_mass / 1e9:.1f} GB/s effective")
+    emit_fn("kernel.gumbel_ref_cpu", t_gum * 1e6,
+            f"single-pass categorical draw, {bytes_bv / t_gum / 1e9:.1f} GB/s")
+    # architecture-level accounting (what the Pallas kernels change on TPU)
+    unf, fus = hbm_passes_unfused(), hbm_passes_fused()
+    v5e_t_unf = unf * bytes_bv / 819e9
+    v5e_t_fus = fus * bytes_bv / 819e9
+    emit_fn("kernel.v5e_hbm_passes", fus,
+            f"unfused {unf:.0f} passes ({v5e_t_unf * 1e6:.0f}us on v5e) -> "
+            f"fused {fus:.0f} passes ({v5e_t_fus * 1e6:.0f}us): "
+            f"{unf / fus:.1f}x decision-plane HBM traffic cut")
+
+
+if __name__ == "__main__":
+    run()

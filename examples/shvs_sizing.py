@@ -1,0 +1,63 @@
+"""SHVS hot-vocab sizing walkthrough (paper §5.4 / Fig. 11–12): measure the
+affine hot-path cost, the ᾱ(H) hit-ratio curve, fit the sizing model, and
+compare predicted H* with the measured optimum.
+
+    PYTHONPATH=src python examples/shvs_sizing.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import SamplingConfig
+from repro.core.hot_vocab import alpha_bar, zipf_probs
+from repro.core.sampling import SamplingParams
+from repro.core.shvs import make_hot_set, shvs_sample
+from repro.core.sizing import SizingModel
+
+
+def measure_hot_path(V, H, B=32, iters=20):
+    """Wall-clock per-sequence time of the SHVS fast path at hot size H."""
+    rng = np.random.default_rng(0)
+    z = jnp.asarray(rng.normal(0, 2, (B, V)).astype(np.float32))
+    hot = make_hot_set(jnp.arange(H, dtype=jnp.int32), V)
+    params = SamplingParams.broadcast(B, SamplingConfig(temperature=0.9,
+                                                        top_k=40))
+    u = jax.random.uniform(jax.random.PRNGKey(0), (B, 3))
+    f = jax.jit(lambda z: shvs_sample(z, params, hot, u[:, 0], u[:, 1],
+                                      u[:, 2], k_cap=min(256, H),
+                                      force_full_fallback=False).tokens)
+    f(z).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        f(z).block_until_ready()
+    return (time.perf_counter() - t0) / (iters * B)
+
+
+def main():
+    V = 32_768
+    # hit-ratio curve from a synthetic Zipf "trace" (model-dependent, §5.4)
+    p = zipf_probs(V, s=1.05, permute=False)
+    rows = np.tile(p, (16, 1))
+    hs = np.unique(np.geomspace(64, V, 24).astype(int))
+    a = alpha_bar(rows, hs, counts=p)
+    print("alpha(H):", [f"{h}:{v:.3f}" for h, v in zip(hs[::6], a[::6])])
+
+    cost_hs = [256, 1024, 4096, 8192, 16384]
+    times = [measure_hot_path(V, h) for h in cost_hs]
+    model = SizingModel.from_measurements(V, cost_hs, times, hs, a)
+    print(f"affine fit: c0={model.c0:.3e}s  c={model.c:.3e}s/token")
+    h_star = model.optimal_h()
+    grid = np.unique(np.geomspace(64, V, 40).astype(int))
+    f_vals = model.expected_cost(grid)
+    h_emp = int(grid[np.argmin(f_vals)])
+    print(f"H* (first-order condition) = {h_star}")
+    print(f"H  (grid argmin of F)      = {h_emp}")
+    print(f"F(H*)={model.expected_cost(h_star):.3e}s  "
+          f"F(V)={model.expected_cost(V):.3e}s  "
+          f"speedup at H* vs full: {model.expected_cost(V) / model.expected_cost(h_star):.2f}x")
+
+
+if __name__ == "__main__":
+    main()

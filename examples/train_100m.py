@@ -1,0 +1,53 @@
+"""Train a ~100M-parameter model for a few hundred steps on the synthetic
+Zipf pipeline (deliverable (b): end-to-end training driver).
+
+    PYTHONPATH=src python examples/train_100m.py --steps 200
+"""
+import argparse
+from dataclasses import replace
+
+import jax
+
+from repro.config import TrainConfig, get_arch
+from repro.training import Trainer
+from repro.training.checkpoint import restore_checkpoint, save_checkpoint
+from repro.training.data import DataConfig, PrefetchLoader, SyntheticDataset
+from repro.training.optimizer import adamw_init
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    args = ap.parse_args()
+
+    # ~100M-param config: smollm-360m family narrowed (12L keeps CPU-feasible)
+    cfg = replace(get_arch("smollm-360m"), name="smollm-100m", num_layers=12,
+                  d_model=640, num_heads=10, num_kv_heads=5, head_dim=64,
+                  d_ff=1706 * 1, vocab_size=49152, dtype="float32")
+    tc = TrainConfig(learning_rate=6e-4, warmup_steps=20,
+                     total_steps=args.steps)
+    trainer = Trainer(cfg, tc)
+    n = sum(x.size for x in jax.tree_util.tree_leaves(trainer.params))
+    print(f"model: {cfg.name}, {n / 1e6:.1f}M params")
+
+    ds = SyntheticDataset(DataConfig(vocab_size=cfg.vocab_size,
+                                     seq_len=args.seq_len,
+                                     batch_size=args.batch))
+    loader = PrefetchLoader(ds)
+    try:
+        hist = trainer.fit(loader, steps=args.steps, log_every=20)
+    finally:
+        loader.close()
+    assert hist[-1]["loss"] < hist[0]["loss"], "loss must decrease"
+    save_checkpoint("/tmp/repro_100m_ckpt", trainer.params, trainer.opt_state,
+                    step=args.steps)
+    p, o, s = restore_checkpoint("/tmp/repro_100m_ckpt", trainer.params,
+                                 adamw_init(trainer.params))
+    print(f"checkpoint round-trip ok at step {s}; "
+          f"loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

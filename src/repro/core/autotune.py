@@ -1,0 +1,98 @@
+"""Online hot-vocab size controller (the paper's "future work (i)":
+QoS-aware controllers that adapt H using the sizing model, §9).
+
+The offline sizing model (§5.4) needs a trace; in production the workload
+drifts (domain shift lowers ᾱ(H), §9 limitations). This controller closes
+the loop online:
+
+1. observe the measured hot mass ᾱ_obs at the current H (the DecisionPlane
+   already reports ``alpha_mean`` per step — the paper's §6 observability);
+2. fit the one-parameter Zipf-tail model
+       ᾱ(H) = (1 − (H/V)^(1−s)) / (1 − V^(1−s)) ≈ 1 − (H/V)^(1−s)
+   to the EWMA of observations (solve s by bisection);
+3. re-derive H* from the sizing model (Eq. 10–12) under the fitted curve
+   and move H toward it with hysteresis (avoid thrash on a flat valley).
+
+Exactness is never at stake — SHVS's rejection/fallback keeps every H
+correct (§5.4: "throughput tuning does not affect distributional
+exactness"); the controller only chases throughput.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.core.sizing import SizingModel
+
+
+def zipf_alpha_curve(V: int, s: float, hs: np.ndarray) -> np.ndarray:
+    """Closed-form cumulative Zipf(s) mass of the top-H ranks."""
+    hs = np.asarray(hs, np.float64)
+    if abs(s - 1.0) < 1e-6:
+        return np.log(hs + 1.0) / np.log(V + 1.0)
+    num = 1.0 - (hs + 1.0) ** (1.0 - s)
+    den = 1.0 - (V + 1.0) ** (1.0 - s)
+    return np.clip(num / den, 0.0, 1.0)
+
+
+def fit_zipf_s(V: int, H: int, alpha_obs: float, lo: float = 1.0001,
+               hi: float = 3.0) -> float:
+    """Solve zipf_alpha_curve(V, s, H) == alpha_obs for s by bisection."""
+    alpha_obs = float(np.clip(alpha_obs, 1e-4, 1.0 - 1e-4))
+    f = lambda s: zipf_alpha_curve(V, s, np.asarray([H]))[0] - alpha_obs
+    if f(lo) > 0:
+        return lo
+    if f(hi) < 0:
+        return hi
+    for _ in range(60):
+        mid = 0.5 * (lo + hi)
+        if f(mid) < 0:
+            lo = mid
+        else:
+            hi = mid
+    return 0.5 * (lo + hi)
+
+
+@dataclass
+class HotSizeController:
+    """EWMA-filtered online H* tracker."""
+
+    vocab_size: int
+    h_current: int
+    c0: float = 3.3e-6            # platform constants from the offline fit
+    c: float = 1.4e-8
+    ewma: float = 0.2             # observation smoothing
+    hysteresis: float = 0.25      # move only if |log2(H*/H)| > this
+    min_h: int = 256
+    adjust_every: int = 32        # steps between adjustments
+    _alpha_ewma: Optional[float] = field(default=None, init=False)
+    _step: int = field(default=0, init=False)
+    history: list = field(default_factory=list, init=False)
+
+    def observe(self, alpha_mean: float) -> Optional[int]:
+        """Feed one step's measured hot mass; returns a new H when the
+        controller decides to move, else None."""
+        a = float(alpha_mean)
+        if not np.isfinite(a):
+            return None
+        self._alpha_ewma = a if self._alpha_ewma is None else \
+            (1 - self.ewma) * self._alpha_ewma + self.ewma * a
+        self._step += 1
+        if self._step % self.adjust_every:
+            return None
+        s = fit_zipf_s(self.vocab_size, self.h_current, self._alpha_ewma)
+        hs = np.unique(np.geomspace(self.min_h, self.vocab_size,
+                                    96).astype(np.int64))
+        model = SizingModel(c0=self.c0, c=self.c, vocab_size=self.vocab_size,
+                            alpha_hs=hs.astype(np.float64),
+                            alpha_vals=zipf_alpha_curve(self.vocab_size, s, hs))
+        h_star = max(self.min_h, model.optimal_h(lo=self.min_h))
+        self.history.append({"step": self._step, "alpha": self._alpha_ewma,
+                             "s_fit": s, "h_star": h_star,
+                             "h_current": self.h_current})
+        if abs(np.log2(max(h_star, 1) / max(self.h_current, 1))) > self.hysteresis:
+            self.h_current = int(h_star)
+            return self.h_current
+        return None

@@ -1,0 +1,149 @@
+"""The DecisionPlane service — SIMPLE's disaggregated sampling plane (§4.2).
+
+Integrates the three mechanisms:
+  S1  sequence-parallel re-shard           (sequence_parallel.py)
+  S2  column-wise penalties + truncation-first filtering
+      (penalties.py / sampling.py; Pallas kernels under kernels/)
+  S3  speculative hot-vocab sampling        (shvs.py)
+
+The service is a separate jitted program from the model forward — the
+runtime can dispatch the next microbatch's forward while sampling for the
+previous one completes (the paper's "overlappable" property, realized via
+async dispatch rather than a CPU sidecar; see DESIGN.md §2).
+
+Determinism: uniforms come from a counter-based key ``fold_in(seed, step)``,
+so tokens are bit-identical for 1 sampler or 512 (the paper's pre-generated
+RNG scheme, §5.1).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SamplingConfig, SHVSConfig
+from repro.core import penalties as pen
+from repro.core.sampling import (SamplingParams, sample_reference,
+                                 truncation_first_sample)
+from repro.core.sequence_parallel import reshard_for_sampling, shard_decision_state
+from repro.core.shvs import HotSet, shvs_sample
+
+
+class DecisionStats(NamedTuple):
+    accept_rate: jnp.ndarray     # mean SHVS fast-path acceptance
+    alpha_mean: jnp.ndarray      # mean hot-vocab mass
+    fallback_rate: jnp.ndarray   # fraction of rows that took the full path
+
+
+class DecisionPlane:
+    """Stateless-per-step sampling service.
+
+    algorithm:
+      "reference"        — full-V masked softmax (baseline oracle)
+      "truncation_first" — paper S2 only
+      "shvs"             — S2 + S3 (the full SIMPLE decision plane)
+      "gumbel"           — beyond-paper single-pass sampler: unfiltered rows
+                           draw via argmax(z + Gumbel) (one HBM pass, no
+                           normalization/sort — kernels/gumbel_kernel.py);
+                           filtered rows take the truncation-first path
+    """
+
+    def __init__(self, vocab_size: int, *, algorithm: str = "shvs",
+                 shvs: SHVSConfig = SHVSConfig(),
+                 hot_set: Optional[HotSet] = None,
+                 sampling_parallelism: str = "sequence_parallel",
+                 k_cap: int = 1024, seed: int = 0):
+        assert algorithm in ("reference", "truncation_first", "shvs", "gumbel")
+        if algorithm == "shvs" and hot_set is None:
+            # default: a contiguous low-id hot set (tokenizers assign low ids
+            # to frequent tokens); real deployments pass a trace-built set
+            H = shvs.resolve_hot_size(vocab_size)
+            from repro.core.shvs import make_hot_set
+            hot_set = make_hot_set(jnp.arange(H, dtype=jnp.int32), vocab_size)
+        self.vocab_size = vocab_size
+        self.algorithm = algorithm
+        self.shvs_cfg = shvs
+        self.hot_set = hot_set
+        self.parallelism = sampling_parallelism
+        self.k_cap = k_cap
+        self.seed = seed
+
+    # -- state ---------------------------------------------------------------
+    def init_state(self, batch: int, prompt_tokens=None, prompt_lens=None
+                   ) -> pen.PenaltyState:
+        return pen.init_state(batch, self.vocab_size, prompt_tokens, prompt_lens)
+
+    def uniforms(self, step, batch: int):
+        """Deterministic (B, 3) uniforms for (accept, hot, tail) draws."""
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed),
+                                 jnp.asarray(step, jnp.uint32))
+        return jax.random.uniform(key, (batch, 3), jnp.float32)
+
+    # -- the per-iteration decision ------------------------------------------
+    def step(self, logits, state: pen.PenaltyState, params: SamplingParams,
+             step_idx, active=None, allow_mask=None):
+        """logits: (B, V) from the LM head. Returns (tokens, state, stats).
+
+        ``allow_mask``: optional (B, V) bool — grammar/allow-list constrained
+        decoding (the paper's future work (iii)): disallowed tokens are
+        masked to −inf BEFORE the filter pipeline, so truncation-first /
+        SHVS exactness machinery applies unchanged (the mask simply composes
+        into Filter(·), §5.2).
+        """
+        B = logits.shape[0]
+        if allow_mask is not None:
+            logits = jnp.where(allow_mask, logits, -1e30)
+        from repro.models import dist as _dist
+        if self.parallelism == "hierarchical" and _dist.get_ctx().active:
+            # beyond-paper: decide in place on (B@batch, V@model) shards
+            from repro.core.hierarchical import hierarchical_sample
+            u = self.uniforms(step_idx, B)
+            tokens, state, res = hierarchical_sample(
+                logits, state, params, u, self.hot_set, k_cap=self.k_cap)
+            if active is not None:
+                tokens = jnp.where(active, tokens, 0)
+            stats = DecisionStats(res.accepted.mean(), res.alpha.mean(),
+                                  (~res.exact_fast).mean())
+            return tokens, state, stats
+        # S1: re-shard the decision plane along the batch axis
+        logits = reshard_for_sampling(logits, self.parallelism)
+        state = shard_decision_state(state, self.parallelism)
+        u = self.uniforms(step_idx, B)
+        u = shard_decision_state(u, self.parallelism)
+
+        z = pen.apply_penalties_rows(logits, state, params.repetition_penalty,
+                                     params.presence_penalty,
+                                     params.frequency_penalty)
+        if self.algorithm == "reference":
+            tokens = sample_reference(z, params, u[:, 1])
+            stats = DecisionStats(jnp.ones(()), jnp.ones(()), jnp.zeros(()))
+        elif self.algorithm == "truncation_first":
+            res = truncation_first_sample(z, params, u[:, 1], k_cap=self.k_cap)
+            tokens = res.tokens
+            stats = DecisionStats(jnp.ones(()), jnp.ones(()),
+                                  1.0 - res.exact.mean())
+        elif self.algorithm == "gumbel":
+            from repro.core.sampling import temperature_scale
+            from repro.kernels.ref import gumbel_argmax_ref
+            zs = temperature_scale(z, params.temperature)
+            seed32 = jnp.asarray(self.seed, jnp.int32) * 1000003 + \
+                jnp.asarray(step_idx, jnp.int32)
+            fast = gumbel_argmax_ref(zs, seed32)
+            res = truncation_first_sample(z, params, u[:, 1], k_cap=self.k_cap)
+            has_filter = (params.top_k > 0) | (params.top_p < 1.0) | \
+                (params.min_p > 0.0)
+            greedy = jnp.argmax(zs, axis=-1).astype(jnp.int32)
+            tokens = jnp.where(params.temperature <= 0.0, greedy,
+                               jnp.where(has_filter, res.tokens, fast))
+            stats = DecisionStats((~has_filter).mean(), jnp.ones(()),
+                                  (has_filter & ~res.exact).mean())
+        else:
+            res = shvs_sample(z, params, self.hot_set, u[:, 0], u[:, 1],
+                              u[:, 2], k_cap=self.k_cap)
+            tokens = res.tokens
+            stats = DecisionStats(res.accepted.mean(), res.alpha.mean(),
+                                  (~res.exact_fast).mean())
+        state = pen.update_histograms(state, tokens, active)
+        return tokens, state, stats

@@ -1,0 +1,112 @@
+"""Penalty state + application (paper §2.2, Eq. 1 & Eq. 5).
+
+The paper's column-wise CPU design has two properties we preserve on TPU:
+
+* **Incremental updates** (Eq. 5): per-sequence histograms ``C_o`` are updated
+  with only the newest token row (a one-hot scatter-add), never rebuilt — the
+  cache-friendly "row append" becomes a single-index scatter on TPU.
+* **Batch-partitioned state**: all tensors here are leading-batch, so the
+  sequence-parallel decision plane shards them with the same partition as the
+  logits rows (§5.1: "per-sequence metadata follow the same batch partition").
+
+Penalties follow the paper's formulation:
+  repetition: f = 1 + (λ_rep − 1) (M_p ∨ M_o);  Z' = Z / f
+  presence:   Z' −= λ_pres · M_o
+  frequency:  Z' −= λ_freq · C_o
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SamplingConfig
+
+
+class PenaltyState(NamedTuple):
+    """Per-sequence token statistics. All arrays are (B, V)."""
+
+    prompt_counts: jnp.ndarray   # C_p  (int32) — step-invariant
+    output_counts: jnp.ndarray   # C_o  (int32) — updated each iteration
+
+    @property
+    def prompt_mask(self):
+        return self.prompt_counts > 0
+
+    @property
+    def output_mask(self):
+        return self.output_counts > 0
+
+
+def init_state(batch: int, vocab_size: int,
+               prompt_tokens: Optional[jnp.ndarray] = None,
+               prompt_lens: Optional[jnp.ndarray] = None) -> PenaltyState:
+    """Build state from (optionally right-padded) prompts.
+
+    prompt_tokens: (B, L_p) int32; prompt_lens: (B,) true lengths (None ->
+    every column counts).
+    """
+    if prompt_tokens is None:
+        cp = jnp.zeros((batch, vocab_size), jnp.int32)
+    else:
+        cp = histogram(prompt_tokens, vocab_size, prompt_lens)
+    return PenaltyState(prompt_counts=cp,
+                        output_counts=jnp.zeros((batch, vocab_size), jnp.int32))
+
+
+def histogram(tokens: jnp.ndarray, vocab_size: int,
+              lens: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Hist(Y): (B, L) int tokens -> (B, V) int32 counts."""
+    B, L = tokens.shape
+    valid = jnp.ones((B, L), jnp.int32) if lens is None else \
+        (jnp.arange(L)[None, :] < lens[:, None]).astype(jnp.int32)
+    out = jnp.zeros((B, vocab_size), jnp.int32)
+    return out.at[jnp.arange(B)[:, None], tokens].add(valid, mode="drop")
+
+
+def update_histograms(state: PenaltyState, new_tokens: jnp.ndarray,
+                      active: Optional[jnp.ndarray] = None) -> PenaltyState:
+    """Eq. 5: C_o^{s+1} = C_o^s + Hist(Y_s) — touch only the newest row.
+
+    new_tokens: (B,) int32; active: (B,) bool — finished sequences don't
+    accumulate.
+    """
+    B = new_tokens.shape[0]
+    inc = jnp.ones((B,), jnp.int32) if active is None else active.astype(jnp.int32)
+    co = state.output_counts.at[jnp.arange(B), new_tokens].add(inc, mode="drop")
+    return state._replace(output_counts=co)
+
+
+def apply_penalties_rows(logits: jnp.ndarray, state: PenaltyState,
+                         repetition: jnp.ndarray, presence: jnp.ndarray,
+                         frequency: jnp.ndarray) -> jnp.ndarray:
+    """Vectorized per-row penalty application: all arguments (B,) arrays.
+
+    λ_rep=1 / λ_pres=0 / λ_freq=0 rows are no-ops; no Python branching so the
+    same program serves heterogeneous request batches (and jits once).
+    """
+    z = logits.astype(jnp.float32)
+    seen = (state.prompt_mask | state.output_mask).astype(jnp.float32)
+    f = 1.0 + (repetition[:, None] - 1.0) * seen
+    z = jnp.where(z > 0, z / f, z * f)
+    z = z - presence[:, None] * state.output_mask.astype(jnp.float32)
+    z = z - frequency[:, None] * state.output_counts.astype(jnp.float32)
+    return z
+
+
+def apply_penalties(logits: jnp.ndarray, state: PenaltyState,
+                    cfg: SamplingConfig) -> jnp.ndarray:
+    """Eq. 1 / §2.2 on (B, V) logits. Returns penalized logits (f32)."""
+    z = logits.astype(jnp.float32)
+    if cfg.repetition_penalty != 1.0:
+        seen = state.prompt_mask | state.output_mask
+        f = 1.0 + (cfg.repetition_penalty - 1.0) * seen.astype(jnp.float32)
+        # paper form Z/f for positive logits; standard extension multiplies
+        # negative logits so the penalty always reduces probability
+        z = jnp.where(z > 0, z / f, z * f)
+    if cfg.presence_penalty != 0.0:
+        z = z - cfg.presence_penalty * state.output_mask.astype(jnp.float32)
+    if cfg.frequency_penalty != 0.0:
+        z = z - cfg.frequency_penalty * state.output_counts.astype(jnp.float32)
+    return z

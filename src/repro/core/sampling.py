@@ -1,0 +1,207 @@
+"""Reference + truncation-first sampling pipelines (paper §2.1, §5.2).
+
+Two distribution-identical implementations of the full production control set
+(temperature, top-k, nucleus top-p, min-p):
+
+* :func:`sample_reference` — the oracle: full-vocabulary masked softmax, the
+  way mainstream engines do it (the paper's baseline decision plane).
+* :func:`truncation_first_sample` — the paper's S2: truncate to the filter
+  support FIRST (one ``top_k`` of size k ≪ V), then normalize and draw only
+  on the truncated domain, mapping the result back through the index map
+  π_b. Exact w.r.t. masked softmax over V (§5.2: "softmax on K_b equals
+  masked softmax over V").
+
+Both consume explicit uniforms so that determinism is independent of how the
+batch is sharded (the paper's pre-generated-RNG requirement, realized with
+counter-based Threefry keys instead of shipped buffers).
+
+All functions operate on penalized, temperature-scaled logits ``z`` (B, V)
+in float32. Per-row sampling controls are arrays (B,), so heterogeneous
+request parameters batch together.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+class SamplingParams(NamedTuple):
+    """Per-row sampling controls (all (B,) arrays)."""
+
+    temperature: jnp.ndarray     # f32; 0 => greedy
+    top_k: jnp.ndarray           # int32; 0 disables
+    top_p: jnp.ndarray           # f32; 1 disables
+    min_p: jnp.ndarray           # f32; 0 disables
+    repetition_penalty: jnp.ndarray
+    presence_penalty: jnp.ndarray
+    frequency_penalty: jnp.ndarray
+
+    @staticmethod
+    def broadcast(batch: int, cfg) -> "SamplingParams":
+        f = lambda v: jnp.full((batch,), v, jnp.float32)
+        return SamplingParams(
+            temperature=f(cfg.temperature),
+            top_k=jnp.full((batch,), cfg.top_k, jnp.int32),
+            top_p=f(cfg.top_p),
+            min_p=f(cfg.min_p),
+            repetition_penalty=f(cfg.repetition_penalty),
+            presence_penalty=f(cfg.presence_penalty),
+            frequency_penalty=f(cfg.frequency_penalty),
+        )
+
+
+def temperature_scale(z: jnp.ndarray, temperature: jnp.ndarray) -> jnp.ndarray:
+    """Scale logits by per-row temperature; τ=0 rows pass through (greedy
+    handled by the caller via argmax)."""
+    t = jnp.maximum(temperature, 1e-6)[:, None]
+    return z.astype(jnp.float32) / t
+
+
+def _inverse_cdf_draw(probs: jnp.ndarray, u: jnp.ndarray) -> jnp.ndarray:
+    """Categorical draw via inverse CDF. probs: (B, N) (not necessarily
+    normalized); u: (B,) in [0,1). Returns indices (B,) int32."""
+    cdf = jnp.cumsum(probs, axis=-1)
+    total = cdf[:, -1:]
+    target = u[:, None] * total
+    idx = jnp.sum((cdf <= target).astype(jnp.int32), axis=-1)
+    return jnp.minimum(idx, probs.shape[-1] - 1)
+
+
+# ---------------------------------------------------------------------------
+# Reference (full-vocabulary) pipeline — the baseline oracle
+# ---------------------------------------------------------------------------
+
+
+def filter_mask_reference(z: jnp.ndarray, params: SamplingParams) -> jnp.ndarray:
+    """Boolean mask (B, V) of tokens allowed by top-k ∧ top-p ∧ min-p.
+
+    Exact tie handling via full sort (this is deliberately the expensive
+    O(V log V) baseline the paper optimizes away).
+    """
+    B, V = z.shape
+    order = jnp.argsort(-z, axis=-1)                     # descending
+    ranks = jnp.zeros((B, V), jnp.int32).at[
+        jnp.arange(B)[:, None], order].set(jnp.arange(V)[None, :])
+    # top-k first (sequential filter composition, HF semantics)
+    k = jnp.where(params.top_k > 0, params.top_k, V)[:, None]
+    mask = ranks < k
+    # top-p (nucleus) on the top-k-renormalized distribution: keep the
+    # smallest prefix of sorted probs with mass >= p (first token always kept)
+    probs = jax.nn.softmax(jnp.where(mask, z, NEG_INF), axis=-1)
+    sp = jnp.take_along_axis(probs, order, axis=-1)
+    cum = jnp.cumsum(sp, axis=-1)
+    keep_sorted = (cum - sp) < params.top_p[:, None]     # exclusive prefix mass
+    keep = jnp.zeros((B, V), bool).at[
+        jnp.arange(B)[:, None], order].set(keep_sorted)
+    mask &= keep
+    # min-p relative to the max of the top-k-filtered distribution
+    pmax = probs.max(axis=-1, keepdims=True)
+    mask &= probs >= params.min_p[:, None] * pmax
+    return mask
+
+
+def sample_reference(z: jnp.ndarray, params: SamplingParams,
+                     u: jnp.ndarray) -> jnp.ndarray:
+    """Oracle sampler on penalized logits z (B, V). u: (B,) uniforms."""
+    z = temperature_scale(z, params.temperature)
+    mask = filter_mask_reference(z, params)
+    zf = jnp.where(mask, z, NEG_INF)
+    probs = jax.nn.softmax(zf, axis=-1)
+    tokens = _inverse_cdf_draw(probs, u)
+    greedy = jnp.argmax(z, axis=-1).astype(jnp.int32)
+    return jnp.where(params.temperature <= 0.0, greedy, tokens.astype(jnp.int32))
+
+
+def masked_probs_reference(z: jnp.ndarray, params: SamplingParams) -> jnp.ndarray:
+    """The target distribution p̃ (B, V) — used by TVD/exactness tests."""
+    z = temperature_scale(z, params.temperature)
+    mask = filter_mask_reference(z, params)
+    return jax.nn.softmax(jnp.where(mask, z, NEG_INF), axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Truncation-first pipeline (paper S2)
+# ---------------------------------------------------------------------------
+
+
+class TruncResult(NamedTuple):
+    tokens: jnp.ndarray          # (B,) int32
+    exact: jnp.ndarray           # (B,) bool — fast path provably exact
+    kept: jnp.ndarray            # (B,) int32 — |K_b| actually normalized
+
+
+def truncation_first_sample(z: jnp.ndarray, params: SamplingParams,
+                            u: jnp.ndarray, *, k_cap: int,
+                            z_is_scaled: bool = False,
+                            full_total: Optional[jnp.ndarray] = None,
+                            full_max: Optional[jnp.ndarray] = None) -> TruncResult:
+    """Truncation-first sampling (§5.2).
+
+    1. ``lax.top_k`` truncates to the k_cap best logits (the index map π_b).
+    2. top-k / top-p / min-p are applied INSIDE the truncated domain.
+    3. softmax + draw run on O(k) elements; the sampled subset index maps
+       back to the vocabulary through π_b.
+
+    When ``z`` is itself a subset of a larger distribution (the SHVS hot
+    block), pass ``full_total = Σ_v exp(z_full − m_full)`` and ``full_max =
+    m_full`` so nucleus/min-p thresholds are computed against the TRUE
+    normalizer; rows whose subset misses the global max are marked inexact.
+
+    ``exact`` is False for a row only if the nucleus needs more than k_cap
+    tokens (possible only when top_k is 0 or > k_cap) or the subset lacks
+    the global max; callers fall back to the reference path for those rows.
+    """
+    B, V = z.shape
+    k_cap = min(k_cap, V)
+    z = z if z_is_scaled else temperature_scale(z, params.temperature)
+    vals, idx = jax.lax.top_k(z, k_cap)                  # (B, k) desc sorted
+    m_local = vals[:, :1]
+    # softmax over the truncated support == masked softmax over V restricted
+    # to these k tokens
+    w = jnp.exp(vals - m_local)
+    pos = jnp.arange(k_cap)[None, :]
+    kk = jnp.where(params.top_k > 0, jnp.minimum(params.top_k, k_cap), k_cap)
+    keep = pos < kk[:, None]
+    subset_total = jnp.sum(w * keep, axis=-1)
+    # the normalizer of the top-k-filtered distribution: with an explicit
+    # top-k the kept subset IS the support; without one the support is the
+    # full distribution (use full_total when this z is itself a subset)
+    if full_total is not None:
+        assert full_max is not None
+        has_max = full_max <= m_local[:, 0] + 1e-6
+        ft_basis = full_total * jnp.exp(full_max - m_local[:, 0])
+        norm_total = jnp.where(params.top_k > 0, subset_total, ft_basis)
+    else:
+        has_max = jnp.ones((B,), bool)
+        ft_basis = jnp.sum(jnp.exp(z - m_local), axis=-1)  # O(V) sum, no sort
+        norm_total = jnp.where(params.top_k > 0, subset_total, ft_basis)
+    p = w * keep / jnp.maximum(norm_total[:, None], 1e-30)
+    # nucleus within the (sorted) subset; exclusive prefix mass
+    cum = jnp.cumsum(p, axis=-1)
+    keep &= (cum - p) < params.top_p[:, None]
+    # min-p (relative to the max prob of the top-k-filtered distribution)
+    keep &= p >= params.min_p[:, None] * p[:, :1]
+    pf = jnp.where(keep, p, 0.0)
+    j = _inverse_cdf_draw(pf, u)
+    tokens = jnp.take_along_axis(idx, j[:, None], axis=-1)[:, 0].astype(jnp.int32)
+    greedy = idx[:, 0].astype(jnp.int32)
+    tokens = jnp.where(params.temperature <= 0.0, greedy, tokens)
+    # exactness: the truncated nucleus must have reached mass top_p over the
+    # TRUE filtered distribution, unless an explicit top_k <= k_cap bounds it
+    mass_at_cap = jnp.sum(w * (pos < kk[:, None]), axis=-1) / \
+        jnp.maximum(norm_total, 1e-30)
+    explicit_k = (params.top_k > 0) & (params.top_k <= k_cap)
+    nucleus_ok = (params.top_p < 1.0) & \
+        (mass_at_cap >= jnp.minimum(params.top_p, 1.0) - 1e-7)
+    # min-p: every token beyond the cap has prob <= the cap's last entry; if
+    # that already fails the min-p threshold, the support closed inside
+    p_last = w[:, -1] / jnp.maximum(norm_total, 1e-30)
+    minp_ok = (params.min_p > 0.0) & (p_last < params.min_p * p[:, 0])
+    full_mass_ok = mass_at_cap >= 1.0 - 1e-7   # cap covers everything
+    exact = (explicit_k | nucleus_ok | minp_ok | full_mass_ok) & has_max
+    kept = keep.sum(-1).astype(jnp.int32)
+    return TruncResult(tokens=tokens, exact=exact, kept=kept)

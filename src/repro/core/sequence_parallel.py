@@ -1,0 +1,97 @@
+"""Sequence-parallel sampling re-shard (paper §5.1 — mechanism S1).
+
+The LM head leaves logits sharded ``(B@batch_axes, V@model_axes)``. Mainstream
+engines reconcile the vocabulary axis (all-gather of B×V) and sample on one
+replica — the baseline. SIMPLE instead re-shards to
+``(B@(batch_axes+model_axes), V replicated-per-shard)``: every chip becomes a
+sampler for B/(dp·tp) sequences and NO vocab-axis collective remains on the
+critical path.
+
+Collective cost per chip (t = |model axes| shards):
+  vocab_gather      : all-gather(V axis)      ≈ B·V·(t−1)/t received bytes
+  sequence_parallel : all-to-all-class reshard ≈ B·V/t·(t−1)/t — t× less,
+and all downstream decision work is embarrassingly parallel along B.
+
+Expressed as sharding constraints so GSPMD emits the collective; the dry-run
+parses the resulting HLO to attribute the bytes (EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import dist
+
+
+def sampler_batch_entry():
+    """Batch partition entry for the sequence-parallel decision plane: batch
+    is split across EVERY mesh axis (all chips are samplers)."""
+    ctx = dist.get_ctx()
+    if not ctx.active:
+        return None
+    axes = tuple(ctx.batch_axes or ()) + tuple(ctx.model_axes or ())
+    return axes if axes else None
+
+
+def reshard_for_sampling(logits: jnp.ndarray, mode: str) -> jnp.ndarray:
+    """Apply the decision-plane sharding to (B, V) logits.
+
+    mode == "sequence_parallel": S1 — batch over all axes, V replicated.
+      Where the per-data-shard batch divides the model-axis size, this is
+      realized as ONE explicit ``all_to_all`` inside ``shard_map`` (the
+      paper's reshard: each rank trades vocabulary slices for whole rows,
+      moving B·V/t instead of gathering B·V·(t−1)/t). Otherwise it falls
+      back to a GSPMD sharding constraint — which the partitioner currently
+      lowers as replicate-then-slice ("involuntary full remat"), measured
+      and discussed in EXPERIMENTS.md §Perf.
+    mode == "vocab_gather":      baseline — batch over batch axes, V gathered.
+    """
+    ctx = dist.get_ctx()
+    if not ctx.active:
+        return logits
+    if mode == "sequence_parallel":
+        B, V = logits.shape
+        m_axes = tuple(ctx.model_axes or ())
+        b_axes = tuple(ctx.batch_axes or ())
+        tp = ctx.axis_size(m_axes)
+        dp = ctx.axis_size(b_axes)
+        b_loc = B // max(dp, 1)
+        if tp > 1 and B % max(dp, 1) == 0 and b_loc % tp == 0 and V % tp == 0:
+            from jax.sharding import PartitionSpec as P
+            b_entry = dist.batch_spec_entry()
+            m_entry = dist.model_spec_entry()
+
+            def reshard(x):
+                # (b_loc, V/t) per shard -> (b_loc/t, V): split rows across
+                # the model group, concatenate vocabulary slices
+                return jax.lax.all_to_all(x, m_axes, split_axis=0,
+                                          concat_axis=1, tiled=True)
+
+            out_entry = tuple(b_axes) + m_axes
+            return jax.shard_map(
+                reshard, mesh=ctx.mesh,
+                in_specs=P(b_entry, m_entry),
+                out_specs=P(out_entry if out_entry else None, None),
+                check_vma=False)(logits)
+        entry = sampler_batch_entry()
+        return dist.constrain(logits, entry, None)
+    if mode == "vocab_gather":
+        return dist.constrain(logits, dist.batch_spec_entry(), None)
+    raise ValueError(f"unknown sampling parallelism {mode!r}")
+
+
+def shard_decision_state(tree, mode: str):
+    """Shard per-sequence decision-plane state (penalty histograms, uniforms)
+    with the same batch partition as the logits rows (§5.1)."""
+    ctx = dist.get_ctx()
+    if not ctx.active:
+        return tree
+    entry = sampler_batch_entry() if mode == "sequence_parallel" \
+        else dist.batch_spec_entry()
+
+    def f(x):
+        if x.ndim == 0:
+            return x
+        return dist.constrain(x, *([entry] + [None] * (x.ndim - 1)))
+
+    return jax.tree_util.tree_map(f, tree)

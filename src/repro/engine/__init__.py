@@ -1,0 +1,3 @@
+"""Serving substrate: requests, continuous-batching scheduler, engine."""
+from repro.engine.request import Request, RequestState  # noqa: F401
+from repro.engine.engine import Engine, EngineConfig  # noqa: F401

@@ -1,0 +1,253 @@
+"""The serving engine: continuous batching + the SIMPLE decision plane.
+
+Architecture (paper §4.2): the *data plane* (model forward) and the
+*decision plane* (DecisionPlane.step) are two separately jitted programs.
+The engine's iteration is:
+
+  ⓪ scheduler.schedule()            — retire / admit / emit scheduling output
+  ① prefill newly admitted requests — masked insert into the batch cache
+  ②③ decode forward                 — logits leave sharded (B@batch, V@model)
+  ④⑤ decision plane                 — S1 re-shard + S2/S3 sampling
+  ⑥ scheduler.commit()              — tokens back into request state
+
+Because the decision plane is its own program consuming the forward's
+output, the runtime can dispatch the next iteration's forward before the
+previous decision completes (async dispatch) — the JAX realization of the
+paper's "overlappable" property.
+
+The engine is deliberately token-only (dense/moe/ssm/hybrid archs); the
+multimodal frontends are exercised by the dry-run and smoke tests.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from functools import partial
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, SamplingConfig, SHVSConfig
+from repro.core.decision_plane import DecisionPlane
+from repro.core.sampling import SamplingParams
+from repro.core import penalties as pen
+from repro.engine.request import Request
+from repro.engine.scheduler import Scheduler
+from repro.models.model import Model
+
+
+@dataclass
+class EngineConfig:
+    max_batch: int = 8               # batch slots (B)
+    max_seq_len: int = 512           # cache capacity per slot
+    algorithm: str = "shvs"          # decision-plane algorithm
+    shvs: SHVSConfig = SHVSConfig()
+    sampling_parallelism: str = "sequence_parallel"
+    k_cap: int = 256
+    seed: int = 0
+    prompt_bucket: int = 32          # prompts padded to multiples of this
+
+
+def _bucket(n: int, mult: int) -> int:
+    return max(mult, ((n + mult - 1) // mult) * mult)
+
+
+class Engine:
+    """Serving engine. Optional online hot-size autotuning (paper §9 future
+    work (i)): pass ``hot_counts`` (a token-frequency vector, e.g. from the
+    offline trace) and ``autotune=True`` — the engine feeds the measured
+    hot mass into :class:`repro.core.autotune.HotSizeController` and
+    rebuilds the hot set (re-jitting the decode program) when H* moves."""
+
+    def __init__(self, model_cfg: ModelConfig, params, engine_cfg: EngineConfig,
+                 hot_set=None, hot_counts=None, autotune: bool = False):
+        self.cfg = model_cfg
+        self.ecfg = engine_cfg
+        self.model = Model(model_cfg)
+        self.params = params
+        self.scheduler = Scheduler(engine_cfg.max_batch)
+        self.decision = DecisionPlane(
+            model_cfg.vocab_size, algorithm=engine_cfg.algorithm,
+            shvs=engine_cfg.shvs, hot_set=hot_set,
+            sampling_parallelism=engine_cfg.sampling_parallelism,
+            k_cap=min(engine_cfg.k_cap, model_cfg.vocab_size),
+            seed=engine_cfg.seed)
+        B, S = engine_cfg.max_batch, engine_cfg.max_seq_len
+        self.cache = self.model.init_cache(B, S)
+        self.pstate = self.decision.init_state(B)
+        self.last_tokens = jnp.zeros((B,), jnp.int32)
+        self._sp = _SamplingParamStore(B)
+        self._decode_jit = jax.jit(self._decode_impl, donate_argnums=(1, 2, 3))
+        self._prefill_cache: Dict[int, callable] = {}
+        self.stats_log: List[dict] = []
+        self._hot_counts = hot_counts
+        self._controller = None
+        if autotune and engine_cfg.algorithm == "shvs":
+            from repro.core.autotune import HotSizeController
+            assert hot_counts is not None, "autotune needs hot_counts"
+            self._controller = HotSizeController(
+                vocab_size=model_cfg.vocab_size,
+                h_current=int(self.decision.hot_set.size))
+
+    # -- jitted bodies ---------------------------------------------------------
+    def _decode_impl(self, params, cache, pstate, last_tokens, sparams,
+                     step, active):
+        logits, cache = self.model.decode_step(params, last_tokens, cache)
+        tokens, pstate, stats = self.decision.step(
+            logits, pstate, sparams, step, active=active)
+        tokens = jnp.where(active, tokens, 0)
+        return tokens, cache, pstate, stats
+
+    def _prefill_impl(self, params, tokens, true_lens):
+        """Prefill a fresh batch (P rows); returns (first tokens' logits
+        source cache rows, pstate rows)."""
+        P, Sp = tokens.shape
+        cache = self.model.init_cache(P, self.ecfg.max_seq_len)
+        logits, cache = self.model.prefill(params, {"tokens": tokens}, cache,
+                                           true_lens=true_lens)
+        pstate = pen.init_state(P, self.cfg.vocab_size, tokens, true_lens)
+        return logits, cache, pstate
+
+    # -- public API --------------------------------------------------------------
+    def submit(self, requests: List[Request]) -> None:
+        for r in requests:
+            self.scheduler.submit(r)
+
+    def step(self, now: Optional[float] = None) -> dict:
+        """One engine iteration. Returns observability stats."""
+        now = time.perf_counter() if now is None else now
+        plan = self.scheduler.schedule()
+        if plan.new_requests:
+            self._admit(plan.new_requests)
+            # a prompt's first token may already satisfy the stop condition
+            plan.active_slots = np.array(
+                [s is not None and not s.should_stop()
+                 for s in self.scheduler.slots])
+        if not plan.active_slots.any():
+            return {}
+        active = jnp.asarray(plan.active_slots)
+        sparams = self._sp.as_params()
+        tokens, self.cache, self.pstate, stats = self._decode_jit(
+            self.params, self.cache, self.pstate, self.last_tokens, sparams,
+            jnp.asarray(self.scheduler.step, jnp.int32), active)
+        self.last_tokens = tokens
+        toks_np = np.asarray(tokens)
+        self.scheduler.commit(toks_np, now=time.perf_counter())
+        rec = {"step": plan.step, "batch": int(active.sum()),
+               "accept_rate": float(stats.accept_rate),
+               "alpha_mean": float(stats.alpha_mean),
+               "fallback_rate": float(stats.fallback_rate)}
+        if self._controller is not None:
+            new_h = self._controller.observe(rec["alpha_mean"])
+            if new_h:
+                from repro.core.hot_vocab import build_hot_set
+                self.decision.hot_set = build_hot_set(
+                    self._hot_counts, new_h, self.cfg.vocab_size)
+                # hot-set shape changed: re-jit the decode program
+                self._decode_jit = jax.jit(self._decode_impl,
+                                           donate_argnums=(1, 2, 3))
+                rec["hot_size"] = new_h
+        self.stats_log.append(rec)
+        return rec
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        steps = 0
+        while self.scheduler.has_work and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.scheduler.finished
+
+    # -- admission ------------------------------------------------------------
+    def _admit(self, new_requests: List[Request]) -> None:
+        """Prefill new requests (padded batch) and insert rows into state."""
+        P = len(new_requests)
+        maxlen = max(r.prompt_len for r in new_requests)
+        Sp = _bucket(maxlen, self.ecfg.prompt_bucket)
+        Sp = min(Sp, self.ecfg.max_seq_len)
+        toks = np.zeros((P, Sp), np.int32)
+        lens = np.zeros((P,), np.int32)
+        for i, r in enumerate(new_requests):
+            p = r.prompt[-Sp:]
+            toks[i, :len(p)] = p
+            lens[i] = len(p)
+        key = (P, Sp)
+        if key not in self._prefill_cache:
+            self._prefill_cache[key] = jax.jit(self._prefill_impl)
+        logits, rows_cache, rows_pstate = self._prefill_cache[key](
+            self.params, jnp.asarray(toks), jnp.asarray(lens))
+        slots = jnp.asarray([r.slot for r in new_requests], jnp.int32)
+        # first sampled token for the new rows via the decision plane
+        sp_rows = _SamplingParamStore(P)
+        for i, r in enumerate(new_requests):
+            sp_rows.set_row(i, r.sampling)
+        first, rows_pstate, _ = self.decision.step(
+            logits, rows_pstate, sp_rows.as_params(),
+            jnp.asarray(self.scheduler.step, jnp.int32))
+        # insert rows into batch state
+        self.cache = _insert_rows(self.cache, rows_cache, slots)
+        self.pstate = pen.PenaltyState(
+            prompt_counts=self.pstate.prompt_counts.at[slots].set(
+                rows_pstate.prompt_counts),
+            output_counts=self.pstate.output_counts.at[slots].set(
+                rows_pstate.output_counts),
+        )
+        self.last_tokens = self.last_tokens.at[slots].set(first)
+        now = time.perf_counter()
+        first_np = np.asarray(first)
+        for i, r in enumerate(new_requests):
+            self._sp.set_row(r.slot, r.sampling)
+            r.first_token_time = now
+            r.output.append(int(first_np[i]))
+            r.token_times.append(now)
+            if r.should_stop():
+                r.finish_time = now
+
+
+def _insert_rows(batch_cache, rows_cache, slots):
+    """Scatter per-row cache entries into the engine's batch cache at
+    ``slots``. Every cache leaf except len/pos is (L|G, B, ...) with the
+    batch on axis 1; ``len`` is (B,); ``pos`` is scalar."""
+    out = {}
+    for k in batch_cache:
+        if k == "pos":
+            out[k] = batch_cache[k]
+        elif k == "len":
+            out[k] = batch_cache[k].at[slots].set(rows_cache[k])
+        else:
+            out[k] = batch_cache[k].at[:, slots].set(rows_cache[k])
+    return out
+
+
+class _SamplingParamStore:
+    """Per-slot sampling parameters as numpy arrays -> SamplingParams."""
+
+    def __init__(self, batch: int):
+        self.temperature = np.ones(batch, np.float32)
+        self.top_k = np.zeros(batch, np.int32)
+        self.top_p = np.ones(batch, np.float32)
+        self.min_p = np.zeros(batch, np.float32)
+        self.repetition = np.ones(batch, np.float32)
+        self.presence = np.zeros(batch, np.float32)
+        self.frequency = np.zeros(batch, np.float32)
+
+    def set_row(self, i: int, cfg: SamplingConfig) -> None:
+        self.temperature[i] = cfg.temperature
+        self.top_k[i] = cfg.top_k
+        self.top_p[i] = cfg.top_p
+        self.min_p[i] = cfg.min_p
+        self.repetition[i] = cfg.repetition_penalty
+        self.presence[i] = cfg.presence_penalty
+        self.frequency[i] = cfg.frequency_penalty
+
+    def as_params(self) -> SamplingParams:
+        return SamplingParams(
+            temperature=jnp.asarray(self.temperature),
+            top_k=jnp.asarray(self.top_k),
+            top_p=jnp.asarray(self.top_p),
+            min_p=jnp.asarray(self.min_p),
+            repetition_penalty=jnp.asarray(self.repetition),
+            presence_penalty=jnp.asarray(self.presence),
+            frequency_penalty=jnp.asarray(self.frequency),
+        )

@@ -1,0 +1,143 @@
+"""Paged KV cache — vLLM-style block allocation in JAX.
+
+The paper's host stack is vLLM (PagedAttention); the contiguous per-slot
+cache in ``models/transformer.py`` wastes memory when sequence lengths are
+skewed. This module provides the paged alternative for the serving engine:
+
+* a global block pool  ``(L, num_blocks, block_size, kv, hd)`` per K and V;
+* a per-slot block table ``(B, max_blocks_per_seq)`` of pool indices
+  (-1 = unallocated), managed functionally on device with a host-side
+  free-list mirror in :class:`BlockAllocator`;
+* ``paged_write`` (one token per active slot) and ``paged_gather``
+  (materialize a contiguous (B, S_view, kv, hd) view for attention —
+  decode-shaped S_view = blocks·block_size with validity masking).
+
+Numerics match the contiguous cache exactly (tests/test_paged_cache.py):
+pages only change WHERE K/V live, never their values, so attention over the
+gathered view with the same length mask is identical.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+
+
+@dataclass
+class PagedCacheConfig:
+    block_size: int = 16
+    num_blocks: int = 256              # pool size (per layer, shared K/V)
+    max_blocks_per_seq: int = 32
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, pcfg: PagedCacheConfig,
+                     dtype=None):
+    """Device state: pools + block table + lengths."""
+    dtype = jnp.dtype(dtype or cfg.dtype)
+    L = cfg.num_layers
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "k_pool": jnp.zeros((L, pcfg.num_blocks, pcfg.block_size, kv, hd),
+                            dtype),
+        "v_pool": jnp.zeros((L, pcfg.num_blocks, pcfg.block_size, kv, hd),
+                            dtype),
+        "block_table": jnp.full((batch, pcfg.max_blocks_per_seq), -1,
+                                jnp.int32),
+        "len": jnp.zeros((batch,), jnp.int32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+class BlockAllocator:
+    """Host-side free-list that mirrors the device block table."""
+
+    def __init__(self, pcfg: PagedCacheConfig, batch: int):
+        self.pcfg = pcfg
+        self.free: List[int] = list(range(pcfg.num_blocks))[::-1]
+        self.owned: List[List[int]] = [[] for _ in range(batch)]
+
+    def blocks_needed(self, length: int) -> int:
+        return -(-max(length, 0) // self.pcfg.block_size)
+
+    def ensure(self, slot: int, new_length: int) -> List[int]:
+        """Grow slot's allocation to cover new_length; returns newly
+        assigned block ids (raises if the pool is exhausted)."""
+        need = self.blocks_needed(new_length)
+        fresh = []
+        while len(self.owned[slot]) < need:
+            if not self.free:
+                raise RuntimeError("paged KV pool exhausted")
+            b = self.free.pop()
+            self.owned[slot].append(b)
+            fresh.append(b)
+        return fresh
+
+    def release(self, slot: int) -> None:
+        self.free.extend(reversed(self.owned[slot]))
+        self.owned[slot] = []
+
+    def table(self, batch: int) -> np.ndarray:
+        t = np.full((batch, self.pcfg.max_blocks_per_seq), -1, np.int32)
+        for s, blocks in enumerate(self.owned):
+            t[s, :len(blocks)] = blocks
+        return t
+
+
+def paged_write(cache: dict, layer_kv: Tuple[jnp.ndarray, jnp.ndarray],
+                lens: jnp.ndarray, pcfg: PagedCacheConfig,
+                active: Optional[jnp.ndarray] = None) -> dict:
+    """Write one token per slot into the pools at position ``lens``.
+
+    layer_kv: (k, v) each (L, B, 1, kv, hd) — all layers' new entries.
+    The block table must already cover position lens (BlockAllocator.ensure).
+    """
+    k_new, v_new = layer_kv
+    L, B = k_new.shape[0], k_new.shape[1]
+    bs = pcfg.block_size
+    blk_idx = lens // bs                       # (B,) table column
+    blk_off = lens % bs                        # (B,) offset inside block
+    pool_idx = jnp.take_along_axis(cache["block_table"], blk_idx[:, None],
+                                   axis=1)[:, 0]                   # (B,)
+    ok = pool_idx >= 0
+    if active is not None:
+        ok = ok & active
+    safe_pool = jnp.where(ok, pool_idx, 0)
+
+    def write(pool, new):
+        # pool: (L, NB, bs, kv, hd); new: (L, B, 1, kv, hd)
+        for b in range(B):        # B is small in serving; unrolled scatter
+            cur = jax.lax.dynamic_slice(
+                pool, (0, safe_pool[b], blk_off[b], 0, 0),
+                (L, 1, 1) + pool.shape[3:])
+            val = jnp.where(ok[b], new[:, b].reshape(cur.shape), cur)
+            pool = jax.lax.dynamic_update_slice(
+                pool, val, (0, safe_pool[b], blk_off[b], 0, 0))
+        return pool
+
+    cache = dict(cache)
+    cache["k_pool"] = write(cache["k_pool"], k_new)
+    cache["v_pool"] = write(cache["v_pool"], v_new)
+    cache["len"] = cache["len"] + (active.astype(jnp.int32)
+                                   if active is not None else 1)
+    return cache
+
+
+def paged_gather(cache: dict, pcfg: PagedCacheConfig):
+    """Materialize contiguous (L, B, S_view, kv, hd) K/V views plus the
+    validity length vector; S_view = max_blocks_per_seq * block_size."""
+    bt = cache["block_table"]                  # (B, MB)
+    B, MB = bt.shape
+    safe = jnp.maximum(bt, 0)
+
+    def gather(pool):
+        # pool: (L, NB, bs, kv, hd) -> (L, B, MB*bs, kv, hd)
+        g = pool[:, safe]                      # (L, B, MB, bs, kv, hd)
+        L = pool.shape[0]
+        return g.reshape(L, B, MB * pcfg.block_size, *pool.shape[3:])
+
+    return gather(cache["k_pool"]), gather(cache["v_pool"]), cache["len"]

@@ -1,0 +1,46 @@
+"""Request lifecycle for the serving engine."""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+from repro.config import SamplingConfig
+
+
+class RequestState(enum.Enum):
+    WAITING = "waiting"
+    RUNNING = "running"
+    FINISHED = "finished"
+
+
+@dataclass
+class Request:
+    request_id: int
+    prompt: List[int]
+    max_new_tokens: int
+    sampling: SamplingConfig = SamplingConfig()
+    eos_token: Optional[int] = None
+    arrival_time: float = 0.0
+
+    # runtime state
+    state: RequestState = RequestState.WAITING
+    output: List[int] = field(default_factory=list)
+    slot: int = -1
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    token_times: List[float] = field(default_factory=list)
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+    @property
+    def done(self) -> bool:
+        return self.state == RequestState.FINISHED
+
+    def should_stop(self) -> bool:
+        if len(self.output) >= self.max_new_tokens:
+            return True
+        return (self.eos_token is not None and self.output and
+                self.output[-1] == self.eos_token)

@@ -1,0 +1,85 @@
+"""Iteration-level continuous-batching scheduler (§4.2 step ⓪).
+
+FCFS admission into a fixed pool of batch slots, vLLM-style: finished
+sequences free their slot at iteration boundaries; waiting requests are
+admitted into free slots and prefilled together. Each iteration the
+scheduler emits a compact *scheduling output* — the analogue of the paper's
+scheduling stream on the shared-memory ring — describing which slots are
+active, which are newly admitted, and the per-slot sampling parameters.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.engine.request import Request, RequestState
+
+
+@dataclass
+class SchedulingOutput:
+    """One iteration's plan (the paper's 'scheduling output')."""
+
+    step: int
+    active_slots: np.ndarray            # (B,) bool
+    new_requests: List[Request]         # admitted this iteration (to prefill)
+    slot_request: List[Optional[Request]]  # per-slot request handle
+
+
+class Scheduler:
+    def __init__(self, num_slots: int):
+        self.num_slots = num_slots
+        self.waiting: List[Request] = []
+        self.slots: List[Optional[Request]] = [None] * num_slots
+        self.step = 0
+        self.finished: List[Request] = []
+
+    # -- queue management -----------------------------------------------------
+    def submit(self, request: Request) -> None:
+        self.waiting.append(request)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting) or any(s is not None for s in self.slots)
+
+    def num_active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    # -- iteration boundary -----------------------------------------------------
+    def schedule(self) -> SchedulingOutput:
+        """Retire finished requests, admit waiting ones, emit the plan."""
+        # retire
+        for i, req in enumerate(self.slots):
+            if req is not None and req.should_stop():
+                req.state = RequestState.FINISHED
+                self.finished.append(req)
+                self.slots[i] = None
+        # admit FCFS into free slots
+        new: List[Request] = []
+        for i in range(self.num_slots):
+            if self.slots[i] is None and self.waiting:
+                req = self.waiting.pop(0)
+                req.state = RequestState.RUNNING
+                req.slot = i
+                self.slots[i] = req
+                new.append(req)
+        active = np.array([s is not None for s in self.slots])
+        out = SchedulingOutput(step=self.step, active_slots=active,
+                               new_requests=new, slot_request=list(self.slots))
+        self.step += 1
+        return out
+
+    # -- commit (§4.2 step ⑥) ---------------------------------------------------
+    def commit(self, tokens: np.ndarray, now: float = 0.0) -> None:
+        """Write sampled tokens back into request state."""
+        for i, req in enumerate(self.slots):
+            if req is None or req.should_stop():
+                continue
+            tok = int(tokens[i])
+            if not req.output:
+                req.first_token_time = now
+            req.output.append(tok)
+            req.token_times.append(now)
+            if req.should_stop():
+                req.finish_time = now

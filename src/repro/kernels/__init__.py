@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the decision plane's compute hot-spots.
+
+The paper's §5.2 single-pass CPU kernels become, on TPU, fused
+HBM-streaming Pallas kernels with explicit BlockSpec VMEM tiling:
+
+* penalty_kernel — fused column-wise penalties + temperature (one pass)
+* shvs_kernel    — the SHVS mass pass (Eq. 6-7): online-softmax rescaled
+                   hot/tail sums + tail max in one pass
+* gumbel_kernel  — beyond-paper single-pass categorical draw (Gumbel-max
+                   with in-VMEM counter-hash noise)
+
+``ops.py`` holds the jit'd public wrappers (padding + interpret switch);
+``ref.py`` the pure-jnp oracles every kernel is tested against.
+"""

@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: single-pass Gumbel-max categorical sampler.
+
+Beyond-paper optimization (EXPERIMENTS.md §Perf): for pure temperature
+sampling (no top-k/top-p), ``argmax_v(z_v + Gumbel_v)`` draws exactly from
+softmax(z) in ONE streaming pass with no normalization, no sort, and no
+materialized (B, V) uniform tensor — the Gumbel noise is generated in-VMEM
+from a counter-based integer hash of (seed, row, col), so HBM traffic is
+exactly one read of the logits. This beats even SHVS's two-pass structure
+when no filters are enabled.
+
+The oracle (``ref.gumbel_argmax_ref``) uses the identical hash, so kernel
+and reference produce bit-identical tokens.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _hash_uniform(seed, b, v):
+    x = (b.astype(jnp.uint32) * jnp.uint32(2654435761) ^
+         v.astype(jnp.uint32) * jnp.uint32(40503) ^
+         jnp.uint32(seed))
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(2246822519)
+    x = x ^ (x >> jnp.uint32(13))
+    x = x * jnp.uint32(3266489917)
+    x = x ^ (x >> jnp.uint32(16))
+    return (x.astype(jnp.float32) + 0.5) * (1.0 / 4294967296.0)
+
+
+def _gumbel_kernel(seed_ref, z_ref, best_ref, arg_ref, *, block_b, block_v):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    z = z_ref[...].astype(jnp.float32)           # (bb, bv)
+    bb, bv = z.shape
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bb, bv), 0) + i * block_b
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bb, bv), 1) + j * block_v
+    u = _hash_uniform(seed_ref[0], rows, cols)
+    g = -jnp.log(-jnp.log(u))
+    zg = z + g
+
+    @pl.when(j == 0)
+    def _init():
+        best_ref[...] = jnp.full_like(best_ref, NEG_INF)
+        arg_ref[...] = jnp.zeros_like(arg_ref)
+
+    tile_best = jnp.max(zg, axis=-1)
+    tile_arg = jnp.argmax(zg, axis=-1).astype(jnp.int32) + j * block_v
+    better = tile_best > best_ref[...]
+    arg_ref[...] = jnp.where(better, tile_arg, arg_ref[...])
+    best_ref[...] = jnp.maximum(best_ref[...], tile_best)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_v", "interpret"))
+def gumbel_argmax(z, seed, *, block_b: int = 8, block_v: int = 512,
+                  interpret: bool = True):
+    """Single-pass categorical draw from softmax(z). See
+    ``ref.gumbel_argmax_ref``. z: (B, V) f32; seed: scalar int32.
+    Returns tokens (B,) int32."""
+    B, V = z.shape
+    assert B % block_b == 0 and V % block_v == 0, (B, V, block_b, block_v)
+    grid = (B // block_b, V // block_v)
+    out_row = lambda dt: pl.BlockSpec((block_b,), lambda i, j: (i,),
+                                      memory_space=pltpu.VMEM)
+    kernel = functools.partial(_gumbel_kernel, block_b=block_b, block_v=block_v)
+    best, arg = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM),
+                  pl.BlockSpec((block_b, block_v), lambda i, j: (i, j),
+                               memory_space=pltpu.VMEM)],
+        out_specs=[out_row(jnp.float32), out_row(jnp.int32)],
+        out_shape=[jax.ShapeDtypeStruct((B,), jnp.float32),
+                   jax.ShapeDtypeStruct((B,), jnp.int32)],
+        interpret=interpret,
+    )(jnp.asarray(seed, jnp.int32).reshape(1), z)
+    return arg

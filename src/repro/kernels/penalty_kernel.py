@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: fused column-wise penalties + temperature (paper §5.2).
+
+The paper's column-wise CPU layout becomes, on TPU, a single HBM→VMEM
+streaming pass over vocabulary tiles: each (block_b, block_v) tile of the
+logits is loaded once, all three penalties and the temperature scale are
+applied in VMEM (VPU elementwise ops, no MXU), and the tile is written back.
+The baseline unfused pipeline reads/writes the (B, V) tensor once per
+penalty (4 passes); this kernel does one.
+
+Grid: (B/block_b, V/block_v); per-row penalty parameters live in SMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _penalty_kernel(rep_ref, pres_ref, freq_ref, temp_ref,
+                    z_ref, cp_ref, co_ref, out_ref):
+    z = z_ref[...].astype(jnp.float32)
+    cp = cp_ref[...]
+    co = co_ref[...]
+    rep = rep_ref[...][:, None]        # (block_b, 1) f32
+    pres = pres_ref[...][:, None]
+    freq = freq_ref[...][:, None]
+    temp = temp_ref[...][:, None]
+    seen = ((cp > 0) | (co > 0)).astype(jnp.float32)
+    f = 1.0 + (rep - 1.0) * seen
+    z = jnp.where(z > 0, z / f, z * f)
+    z = z - pres * (co > 0).astype(jnp.float32)
+    z = z - freq * co.astype(jnp.float32)
+    out_ref[...] = z / jnp.maximum(temp, 1e-6)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_v", "interpret"))
+def penalty_scale(logits, counts_p, counts_o, repetition, presence, frequency,
+                  temperature, *, block_b: int = 8, block_v: int = 512,
+                  interpret: bool = True):
+    """Fused penalty + temperature kernel. See ``ref.penalty_ref``.
+
+    logits: (B, V); counts_*: (B, V) int32; per-row params: (B,) f32.
+    B % block_b == 0 and V % block_v == 0 are required (ops.py pads).
+    """
+    B, V = logits.shape
+    assert B % block_b == 0 and V % block_v == 0, (B, V, block_b, block_v)
+    grid = (B // block_b, V // block_v)
+    tile = lambda: pl.BlockSpec((block_b, block_v), lambda i, j: (i, j),
+                                memory_space=pltpu.VMEM)
+    row = lambda: pl.BlockSpec((block_b,), lambda i, j: (i,),
+                               memory_space=pltpu.VMEM)
+    return pl.pallas_call(
+        _penalty_kernel,
+        grid=grid,
+        in_specs=[row(), row(), row(), row(), tile(), tile(), tile()],
+        out_specs=tile(),
+        out_shape=jax.ShapeDtypeStruct((B, V), jnp.float32),
+        interpret=interpret,
+    )(repetition, presence, frequency, temperature, logits, counts_p, counts_o)

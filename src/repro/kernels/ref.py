@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These define the exact semantics the kernels must match (asserted by
+``tests/test_kernels.py`` over shape/dtype sweeps in interpret mode).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def penalty_ref(logits, counts_p, counts_o, repetition, presence, frequency,
+                temperature):
+    """Fused penalties + temperature scale (paper §2.2 / Eq. 1).
+
+    logits: (B, V) any float dtype; counts_*: (B, V) int32;
+    repetition/presence/frequency/temperature: (B,) f32.
+    Returns penalized, temperature-scaled logits (B, V) f32.
+    """
+    z = logits.astype(jnp.float32)
+    seen = ((counts_p > 0) | (counts_o > 0)).astype(jnp.float32)
+    f = 1.0 + (repetition[:, None] - 1.0) * seen
+    z = jnp.where(z > 0, z / f, z * f)
+    z = z - presence[:, None] * (counts_o > 0).astype(jnp.float32)
+    z = z - frequency[:, None] * counts_o.astype(jnp.float32)
+    return z / jnp.maximum(temperature, 1e-6)[:, None]
+
+
+def shvs_mass_ref(z, hot_mask):
+    """The SHVS streaming pass (paper Eq. 6–7): returns
+    (m, s_hot, s_tail, tail_max), each (B,) f32.
+
+    z: (B, V) f32 penalized/scaled logits; hot_mask: (V,) bool.
+    Sums are computed in the stable basis w = exp(z - m).
+    """
+    m = jnp.max(z, axis=-1)
+    w = jnp.exp(z - m[:, None])
+    hotf = hot_mask.astype(jnp.float32)[None, :]
+    s_hot = jnp.sum(w * hotf, axis=-1)
+    s_tail = jnp.sum(w * (1.0 - hotf), axis=-1)
+    tail_max = jnp.max(jnp.where(hot_mask[None, :], NEG_INF, z), axis=-1)
+    return m, s_hot, s_tail, tail_max
+
+
+def _hash_uniform(seed, b, v):
+    """Deterministic per-(seed,row,col) uniform in (0,1) via a 32-bit integer
+    hash (xorshift-mix). Shared by the Gumbel kernel and its oracle so both
+    produce bit-identical samples."""
+    x = (b.astype(jnp.uint32) * jnp.uint32(2654435761) ^
+         v.astype(jnp.uint32) * jnp.uint32(40503) ^
+         jnp.uint32(seed))
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(2246822519)
+    x = x ^ (x >> jnp.uint32(13))
+    x = x * jnp.uint32(3266489917)
+    x = x ^ (x >> jnp.uint32(16))
+    # (0, 1): add 0.5 then scale so zero maps off the boundary
+    return (x.astype(jnp.float32) + 0.5) * (1.0 / 4294967296.0)
+
+
+def gumbel_argmax_ref(z, seed):
+    """Single-pass categorical draw via the Gumbel-max trick:
+        y = argmax_v ( z_v + G_v ),  G_v = -log(-log(U_v)).
+
+    Distribution-exact for softmax(z) sampling with NO normalization pass —
+    the beyond-paper single-pass sampler (see EXPERIMENTS.md §Perf).
+    z: (B, V) f32; seed: () int32. Returns (tokens (B,) int32).
+    """
+    B, V = z.shape
+    b = jax.lax.broadcasted_iota(jnp.int32, (B, V), 0)
+    v = jax.lax.broadcasted_iota(jnp.int32, (B, V), 1)
+    u = _hash_uniform(seed, b, v)
+    g = -jnp.log(-jnp.log(u))
+    return jnp.argmax(z + g, axis=-1).astype(jnp.int32)

@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: the SHVS streaming pass (paper Eq. 6–7).
+
+One HBM→VMEM pass over vocabulary tiles computes, per row, ALL of:
+  m        = max_v z_v                      (stable-softmax basis)
+  S_hot    = Σ_{v∈H}   exp(z_v − m)
+  S_tail   = Σ_{v∉H}   exp(z_v − m)
+  tail_max = max_{v∉H} z_v                  (the containment guard input)
+
+using the online-softmax rescaling trick: when a tile raises the running max
+by Δ, previously accumulated sums are rescaled by exp(−Δ). The unfused jnp
+oracle needs 4 separate O(V) reductions plus a materialized exp(z−m) tensor;
+this kernel reads z once and keeps only (block_b,) accumulators in VMEM.
+
+Grid: (B/block_b, V/block_v) with the vocab axis iterated innermost
+(sequentially on TPU), accumulating into the same output block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _shvs_kernel(z_ref, hot_ref, m_ref, shot_ref, stail_ref, tmax_ref):
+    j = pl.program_id(1)
+    z = z_ref[...].astype(jnp.float32)           # (bb, bv)
+    hot = hot_ref[...][None, :] != 0             # (1, bv) bool
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        shot_ref[...] = jnp.zeros_like(shot_ref)
+        stail_ref[...] = jnp.zeros_like(stail_ref)
+        tmax_ref[...] = jnp.full_like(tmax_ref, NEG_INF)
+
+    m_old = m_ref[...]
+    tile_max = jnp.max(z, axis=-1)
+    m_new = jnp.maximum(m_old, tile_max)
+    scale = jnp.exp(m_old - m_new)
+    w = jnp.exp(z - m_new[:, None])
+    hot_f = hot.astype(jnp.float32)
+    shot_ref[...] = shot_ref[...] * scale + jnp.sum(w * hot_f, axis=-1)
+    stail_ref[...] = stail_ref[...] * scale + jnp.sum(w * (1.0 - hot_f), axis=-1)
+    tmax_ref[...] = jnp.maximum(
+        tmax_ref[...], jnp.max(jnp.where(hot, NEG_INF, z), axis=-1))
+    m_ref[...] = m_new
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_v", "interpret"))
+def shvs_masses(z, hot_mask, *, block_b: int = 8, block_v: int = 512,
+                interpret: bool = True):
+    """Fused SHVS mass pass. See ``ref.shvs_mass_ref``.
+
+    z: (B, V) f32; hot_mask: (V,) bool/int. Returns (m, s_hot, s_tail,
+    tail_max), each (B,) f32.
+    """
+    B, V = z.shape
+    assert B % block_b == 0 and V % block_v == 0, (B, V, block_b, block_v)
+    grid = (B // block_b, V // block_v)
+    out_row = lambda: pl.BlockSpec((block_b,), lambda i, j: (i,),
+                                   memory_space=pltpu.VMEM)
+    m, s_hot, s_tail, tail_max = pl.pallas_call(
+        _shvs_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_b, block_v), lambda i, j: (i, j),
+                               memory_space=pltpu.VMEM),
+                  pl.BlockSpec((block_v,), lambda i, j: (j,),
+                               memory_space=pltpu.VMEM)],
+        out_specs=[out_row(), out_row(), out_row(), out_row()],
+        out_shape=[jax.ShapeDtypeStruct((B,), jnp.float32)] * 4,
+        interpret=interpret,
+    )(z, hot_mask.astype(jnp.int32))
+    return m, s_hot, s_tail, tail_max

@@ -1,0 +1,358 @@
+"""Trip-count-aware HLO module analysis.
+
+``compiled.cost_analysis()`` (HloCostAnalysis) visits every computation ONCE:
+a ``lax.scan`` over 48 layers reports 1/48th of the real FLOPs/bytes, and a
+naive text scan of collectives has the same flaw. This parser:
+
+1. splits the optimized HLO text into computations;
+2. builds the call graph (calls= / body= / condition= / to_apply=);
+3. reads ``known_trip_count`` from while-op backend configs;
+4. attributes per-computation costs and multiplies along the call graph:
+
+   * collective bytes   — same conventions as hlo_analysis.parse_collectives
+   * dot FLOPs          — 2 · |output| · |contracted dims|
+   * HBM traffic proxy  — Σ (operand bytes + output bytes) over top-level
+     ops, treating fusions as single ops (their internals don't touch HBM).
+
+This is the measurement backbone of EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*->.*{")
+_REF_RE = re.compile(
+    r"(?:calls=|body=|condition=|to_apply=|branch_computations=\{)%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_WHILE_RE = re.compile(r"\bwhile\(")
+_TRIP_RE = re.compile(r'known_trip_count"?\s*:\s*\{"?n"?\s*:\s*"?(\d+)"?')
+_DOT_RE = re.compile(r"=\s*\w+\[([\d,]*)\][^=]*\b(?:dot|convolution)\(")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# ops whose operands/outputs we do NOT count as HBM traffic
+_SKIP_TRAFFIC = ("parameter", "constant", "tuple", "get-tuple-element",
+                 "bitcast", "after-all", "partition-id", "replica-id",
+                 "while", "conditional", "call")
+
+
+def _shapes_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape_bytes(text: str) -> int:
+    m = _SHAPE_RE.search(text)
+    if not m or m.group(1) not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[m.group(1)]
+
+
+@dataclass
+class CompStats:
+    name: str
+    collective: Dict[str, int] = field(default_factory=dict)
+    coll_count: Dict[str, int] = field(default_factory=dict)
+    dot_flops: float = 0.0
+    traffic: float = 0.0
+    # (child_name, multiplier) — while bodies get their trip count
+    children: List[Tuple[str, float]] = field(default_factory=list)
+    is_fusion_body: bool = False
+
+
+def _op_name(line: str) -> Optional[str]:
+    m = re.search(r"=\s*(?:\([^)]*\)|\S+)\s+([a-z][a-z0-9\-]*)\(", line)
+    return m.group(1) if m else None
+
+
+def _parse_dot_flops(line: str) -> float:
+    md = _DOT_RE.search(line)
+    if not md:
+        return 0.0
+    out_elems = 1
+    for d in md.group(1).split(","):
+        if d:
+            out_elems *= int(d)
+    # contracted dims from lhs operand shape
+    mc = _CONTRACT_RE.search(line)
+    inner = line[line.index("("):]
+    lhs = _SHAPE_RE.search(inner)
+    contracted = 1
+    if mc and lhs:
+        dims = [int(x) for x in lhs.group(2).split(",") if x]
+        for ci in mc.group(1).split(","):
+            if ci and int(ci) < len(dims):
+                contracted *= dims[int(ci)]
+    else:
+        contracted = 1
+    return 2.0 * out_elems * contracted
+
+
+class HloModuleStats:
+    def __init__(self, hlo_text: str):
+        self.comps: Dict[str, CompStats] = {}
+        self.entry: Optional[str] = None
+        self._parse(hlo_text)
+
+    # -- parsing --------------------------------------------------------------
+    @staticmethod
+    def _is_header(line: str) -> Optional[Tuple[str, bool]]:
+        """Computation header: '%name (params) -> type {' or ENTRY variant."""
+        if not line.endswith("{") or ") -> " not in line and "->" not in line:
+            return None
+        is_entry = line.startswith("ENTRY")
+        body = line[5:].strip() if is_entry else line
+        if not body.startswith("%"):
+            return None
+        name = body.split(None, 1)[0].split("(", 1)[0].lstrip("%").rstrip()
+        if not name:
+            return None
+        return name, is_entry
+
+    def _parse(self, text: str) -> None:
+        cur: Optional[CompStats] = None
+        fusion_children: set = set()
+        # first pass: symbol table %name -> defining line's result shape str
+        self.shape_of: Dict[str, str] = {}
+        for raw in text.splitlines():
+            line = raw.strip()
+            if line.startswith("%") and " = " in line and not line.endswith("{"):
+                name, rhs = line.split(" = ", 1)
+                name = name.strip().lstrip("%")
+                # result shape: everything up to the op name token
+                m = re.match(r"((?:\([^=]*?\)|\S+))\s", rhs)
+                if m:
+                    self.shape_of[name] = m.group(1)
+            elif line.startswith("ROOT %") and " = " in line:
+                name = line[5:].split(" = ", 1)[0].strip().lstrip("%")
+                rhs = line.split(" = ", 1)[1]
+                m = re.match(r"((?:\([^=]*?\)|\S+))\s", rhs)
+                if m:
+                    self.shape_of[name] = m.group(1)
+        for raw in text.splitlines():
+            line = raw.strip()
+            hdr = self._is_header(line)
+            if hdr:
+                cur = CompStats(name=hdr[0])
+                self.comps[cur.name] = cur
+                if hdr[1]:
+                    self.entry = cur.name
+                continue
+            if cur is None or not line or line == "}":
+                continue
+            if line.startswith("ROOT "):
+                line = line[5:]
+            op = _op_name(line)
+            # call-graph edges
+            if op == "while" or _WHILE_RE.search(line):
+                body = re.search(r"body=%?([\w\.\-]+)", line)
+                cond = re.search(r"condition=%?([\w\.\-]+)", line)
+                trip = _TRIP_RE.search(line)
+                n = float(trip.group(1)) if trip else 1.0
+                if body:
+                    cur.children.append((body.group(1), n))
+                if cond:
+                    cur.children.append((cond.group(1), n + 1))
+                continue
+            mb = _BRANCHES_RE.search(line)
+            if mb:
+                for b in mb.group(1).split(","):
+                    b = b.strip().lstrip("%")
+                    if b:
+                        cur.children.append((b, 1.0))
+            refs = _REF_RE.findall(line)
+            if op == "fusion":
+                for rname in refs:
+                    fusion_children.add(rname)
+                    cur.children.append((rname, 1.0))
+            elif op in ("call", "conditional", "custom-call", "reduce",
+                        "map", "sort", "scatter", "select-and-scatter",
+                        "reduce-window", "all-reduce"):
+                for rname in refs:
+                    cur.children.append((rname, 1.0))
+            # operand resolution via the symbol table
+            out_b, in_b = self._op_bytes(line, op)
+            # costs
+            if op in _COLLECTIVES or (op and op.endswith("-start")
+                                      and op[:-6] in _COLLECTIVES):
+                kind = op[:-6] if op.endswith("-start") else op
+                if kind == "all-gather":
+                    moved = max(out_b - in_b, 0)
+                elif kind == "all-reduce":
+                    moved = 2 * out_b
+                elif kind == "reduce-scatter":
+                    moved = max(in_b - out_b, 0)
+                else:
+                    moved = in_b
+                cur.collective[kind] = cur.collective.get(kind, 0) + moved
+                cur.coll_count[kind] = cur.coll_count.get(kind, 0) + 1
+            cur.dot_flops += self._dot_flops(line)
+            if op and op not in _SKIP_TRAFFIC:
+                if op == "dynamic-update-slice":
+                    # in-place on TPU: traffic ≈ update read + slice write
+                    upd = self._nth_operand_bytes(line, op, 1)
+                    cur.traffic += 2 * upd
+                elif op == "dynamic-slice":
+                    cur.traffic += 2 * out_b
+                else:
+                    cur.traffic += out_b + in_b
+        for name in fusion_children:
+            if name in self.comps:
+                self.comps[name].is_fusion_body = True
+
+    def _op_bytes(self, line: str, op) -> Tuple[int, int]:
+        """(output bytes, summed operand bytes) using the symbol table."""
+        out_b = in_b = 0
+        if " = " in line:
+            name = line.split(" = ", 1)[0].strip().lstrip("%")
+            shape = self.shape_of.get(name)
+            if shape:
+                out_b = _shapes_bytes(shape)
+        if op:
+            key = f" {op}("
+            i = line.find(key)
+            if i >= 0:
+                inner = line[i + len(key):]
+                # operands: inline shapes OR %references (resolve via table)
+                depth, j = 1, 0
+                while j < len(inner) and depth:
+                    if inner[j] == "(":
+                        depth += 1
+                    elif inner[j] == ")":
+                        depth -= 1
+                    j += 1
+                args = inner[:j - 1]
+                inline = _shapes_bytes(args)
+                if inline:
+                    in_b = inline
+                else:
+                    for ref in re.findall(r"%([\w\.\-]+)", args):
+                        s = self.shape_of.get(ref)
+                        if s:
+                            in_b += _shapes_bytes(s)
+        return out_b, in_b
+
+    def _nth_operand_bytes(self, line: str, op: str, n: int) -> int:
+        key = f" {op}("
+        i = line.find(key)
+        if i < 0:
+            return 0
+        args = line[i + len(key):]
+        depth, j = 1, 0
+        while j < len(args) and depth:
+            if args[j] == "(":
+                depth += 1
+            elif args[j] == ")":
+                depth -= 1
+            j += 1
+        refs = re.findall(r"%([\w\.\-]+)", args[:j - 1])
+        if len(refs) > n:
+            s = self.shape_of.get(refs[n])
+            if s:
+                return _shapes_bytes(s)
+        return 0
+
+    def _dot_flops(self, line: str) -> float:
+        md = _DOT_RE.search(line)
+        if not md:
+            return 0.0
+        out_elems = 1
+        for d in md.group(1).split(","):
+            if d:
+                out_elems *= int(d)
+        mc = _CONTRACT_RE.search(line)
+        contracted = 1
+        if mc:
+            # lhs operand: first argument of the dot call
+            i = line.find("dot(")
+            args = line[i + 4:]
+            lhs_shape = None
+            m_inline = _SHAPE_RE.match(args.strip())
+            if m_inline:
+                lhs_shape = args.strip()
+            else:
+                m_ref = re.match(r"\s*%([\w\.\-]+)", args)
+                if m_ref:
+                    lhs_shape = self.shape_of.get(m_ref.group(1), "")
+            if lhs_shape:
+                m_s = _SHAPE_RE.search(lhs_shape)
+                if m_s:
+                    dims = [int(x) for x in m_s.group(2).split(",") if x]
+                    for ci in mc.group(1).split(","):
+                        if ci and int(ci) < len(dims):
+                            contracted *= dims[int(ci)]
+        return 2.0 * out_elems * contracted
+
+    # -- multipliers ------------------------------------------------------------
+    def multipliers(self) -> Dict[str, float]:
+        mult: Dict[str, float] = {}
+        if self.entry is None:
+            # fall back: any computation not referenced by others is a root
+            referenced = {c for comp in self.comps.values()
+                          for c, _ in comp.children}
+            roots = [n for n in self.comps if n not in referenced]
+        else:
+            roots = [self.entry]
+
+        def visit(name: str, m: float, depth=0):
+            if name not in self.comps or depth > 50:
+                return
+            mult[name] = mult.get(name, 0.0) + m
+            for child, k in self.comps[name].children:
+                visit(child, m * k, depth + 1)
+
+        for r in roots:
+            visit(r, 1.0)
+        return mult
+
+    # -- aggregates --------------------------------------------------------------
+    def totals(self) -> dict:
+        mult = self.multipliers()
+        coll: Dict[str, float] = {}
+        counts: Dict[str, float] = {}
+        flops = 0.0
+        traffic = 0.0
+        for name, comp in self.comps.items():
+            m = mult.get(name, 0.0)
+            if m == 0.0:
+                continue
+            for k, v in comp.collective.items():
+                coll[k] = coll.get(k, 0.0) + v * m
+            for k, v in comp.coll_count.items():
+                counts[k] = counts.get(k, 0.0) + v * m
+            flops += comp.dot_flops * m
+            if not comp.is_fusion_body:
+                traffic += comp.traffic * m
+        return {
+            "collective_bytes": sum(coll.values()),
+            "collective_bytes_by_kind": coll,
+            "collective_counts": counts,
+            "dot_flops": flops,
+            "traffic_bytes": traffic,
+        }
+
+
+def analyze_hlo(hlo_text: str) -> dict:
+    return HloModuleStats(hlo_text).totals()

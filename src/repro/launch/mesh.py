@@ -1,0 +1,47 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS before first init.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16×16 = 256 chips per pod; 2 pods = 512 chips with a leading 'pod'
+    axis. Requires jax to report >= the needed device count (the dry-run
+    forces 512 host devices via XLA_FLAGS)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)}; "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "any jax import (dryrun.py does this)")
+    arr = np.asarray(devices[:n]).reshape(shape)
+    return Mesh(arr, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Small mesh over however many (possibly forced-host) devices exist —
+    used by distribution tests."""
+    n = data * model
+    devices = jax.devices()
+    assert len(devices) >= n, (len(devices), n)
+    arr = np.asarray(devices[:n]).reshape(data, model)
+    return Mesh(arr, ("data", "model"))
+
+
+def mesh_axes(mesh: Mesh):
+    """(batch_axes, model_axes) naming convention for a production mesh."""
+    names = mesh.axis_names
+    batch = tuple(a for a in names if a in ("pod", "data"))
+    model = tuple(a for a in names if a == "model")
+    return batch, model

@@ -1,0 +1,108 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from the
+dry-run JSONL records.
+
+    PYTHONPATH=src python -m repro.launch.report dryrun_all.jsonl
+"""
+from __future__ import annotations
+
+import json
+import sys
+from collections import defaultdict
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x == 0:
+        return "0"
+    for unit, scale in (("s", 1), ("ms", 1e-3), ("us", 1e-6), ("ns", 1e-9)):
+        if abs(x) >= scale:
+            return f"{x / scale:.2f}{unit}"
+    return f"{x:.1e}s"
+
+
+def fmt_b(x):
+    if x is None:
+        return "-"
+    for unit, scale in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if abs(x) >= scale:
+            return f"{x / scale:.2f}{unit}"
+    return f"{x:.0f}B"
+
+
+def load(path):
+    recs = []
+    with open(path) as f:
+        for line in f:
+            if line.strip():
+                recs.append(json.loads(line))
+    # keep the LAST record per key (reruns supersede)
+    out = {}
+    for r in recs:
+        out[(r["arch"], r["shape"], r["mesh"])] = r
+    return list(out.values())
+
+
+def roofline_table(recs, mesh="16x16"):
+    rows = []
+    hdr = ("| arch | shape | compute | memory | collective | bottleneck | "
+           "MODEL_FLOPS | HLO_FLOPS | useful | coll bytes | HBM bytes |")
+    sep = "|" + "---|" * 11
+    rows.append(hdr)
+    rows.append(sep)
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != mesh or r.get("status") != "ok":
+            continue
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+            f"**{r['bottleneck']}** | {r['model_flops']:.2e} | "
+            f"{r['hlo_flops']:.2e} | {r['useful_ratio']:.2f} | "
+            f"{fmt_b(r['collective_bytes'])} | {fmt_b(r['hlo_bytes'])} |")
+    return "\n".join(rows)
+
+
+def dryrun_table(recs):
+    rows = ["| arch | shape | mesh | status | compile | per-device bytes | "
+            "collectives (counts) |",
+            "|" + "---|" * 7]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        ma = r.get("memory_analysis", {})
+        per_dev = None
+        if isinstance(ma, dict) and "temp_size_in_bytes" in ma:
+            per_dev = (ma.get("argument_size_in_bytes", 0) +
+                       ma.get("output_size_in_bytes", 0) +
+                       ma.get("temp_size_in_bytes", 0))
+        cc = r.get("collective_counts", {})
+        cstr = ",".join(f"{k}:{int(v)}" for k, v in sorted(cc.items()) if v)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r.get('status')} |"
+            f" {r.get('compile_s', 0):.1f}s | {fmt_b(per_dev)} | {cstr} |")
+    return "\n".join(rows)
+
+
+def summary(recs):
+    ok = [r for r in recs if r.get("status") == "ok"]
+    by_bn = defaultdict(int)
+    for r in ok:
+        if r["mesh"] == "16x16":
+            by_bn[r["bottleneck"]] += 1
+    return (f"{len(ok)}/{len(recs)} combinations compiled; single-pod "
+            f"bottlenecks: {dict(by_bn)}")
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_all.jsonl"
+    recs = load(path)
+    print("## Summary\n")
+    print(summary(recs))
+    print("\n## Roofline (single-pod 16x16, 256 chips)\n")
+    print(roofline_table(recs, "16x16"))
+    print("\n## Roofline (multi-pod 2x16x16, 512 chips)\n")
+    print(roofline_table(recs, "2x16x16"))
+    print("\n## Dry-run compile records\n")
+    print(dryrun_table(recs))
+
+
+if __name__ == "__main__":
+    main()

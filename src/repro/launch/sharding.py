@@ -1,0 +1,237 @@
+"""Sharding rules: map every parameter / cache / batch leaf to a
+PartitionSpec on the production mesh.
+
+Conventions (see DESIGN.md §6):
+* weights — Megatron TP on the 'model' axis (attention heads, FFN hidden,
+  vocab for embeddings/LM head); MoE experts expert-parallel on 'model'
+  with FSDP-style storage sharding of the expert hidden dim over 'data'
+  (gathered at use inside the shard_map — the ZeRO-3 pattern that makes the
+  784B-total llama4 weights storable on v5e);
+* activations/batch — (pod, data);
+* KV caches — batch over (pod, data) and the cache sequence dim over
+  'model' (flash-decode style: attention reduces over the sharded seq dim
+  with an all-reduce);
+* long_500k (B=1) — batch replicated; recurrent/KV state sharded over
+  'model' on a head/state dim instead.
+
+Every rule degrades to replication when the dim is not divisible by the
+axis size, so the same rules serve reduced smoke configs.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, ShapeConfig
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fit(mesh: Mesh, axes, dim: int):
+    """Return axes if dim divides evenly, else None (replicate)."""
+    if axes is None:
+        return None
+    size = _axis_size(mesh, axes)
+    return axes if size > 1 and dim % size == 0 else None
+
+
+def _spec(mesh, entries) -> P:
+    return P(*entries)
+
+
+def batch_axes_for(shape: ShapeConfig, mesh: Mesh) -> Optional[Tuple[str, ...]]:
+    """Which mesh axes shard the activation batch for this input shape."""
+    batch, _ = _mesh_split(mesh)
+    n = _axis_size(mesh, batch)
+    if shape.global_batch % max(n, 1) == 0 and shape.global_batch >= n:
+        return batch
+    # e.g. long_500k global_batch=1 — batch is replicated
+    return None
+
+
+def _mesh_split(mesh: Mesh):
+    names = mesh.axis_names
+    return (tuple(a for a in names if a in ("pod", "data")),
+            tuple(a for a in names if a == "model"))
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def param_spec(path: str, shape: Tuple[int, ...], mesh: Mesh,
+               cfg: ModelConfig) -> P:
+    """PartitionSpec for one parameter leaf, keyed by its tree path."""
+    batch, model = _mesh_split(mesh)
+    m = model[0] if model else None
+    # FSDP storage sharding uses ALL batch axes (pod+data): on the 512-chip
+    # mesh this halves per-chip expert/optimizer bytes vs data-only
+    # (§Perf iteration 4)
+    d_axes = tuple(batch) if batch else None
+    nd = len(shape)
+
+    def last(axis):   # shard the last dim
+        return P(*([None] * (nd - 1) + [_fit(mesh, axis, shape[-1])]))
+
+    def at(i, axis):  # shard dim i
+        e = [None] * nd
+        e[i] = _fit(mesh, axis, shape[i])
+        return P(*e)
+
+    p = path
+    # embeddings / head
+    if p.endswith("emb/tok"):
+        return at(0, m)                        # vocab-sharded
+    if p.endswith("emb/head"):
+        return last(m)
+    if p.endswith("dec_pos"):
+        return P(*([None] * nd))
+    # attention projections (stacked: (L, d, h) / unstacked: (d, h))
+    if any(p.endswith(f"attn/{w}") or p.endswith(f"cross/{w}")
+           or p.endswith(f"shared_attn/{w}") for w in ("w_q", "w_k", "w_v")):
+        return last(m)
+    if p.endswith("attn/w_o") or p.endswith("cross/w_o") \
+            or p.endswith("shared_attn/w_o"):
+        return at(nd - 2, m)
+    # dense MLPs (incl. shared expert & whisper encoder)
+    if p.endswith("w_gate") or p.endswith("w_up") or p.endswith("w_ck"):
+        if "moe/" in p and "shared" not in p:
+            # experts (L, E, d, f): EP on model over E, FSDP storage on data
+            # over f
+            e = [None] * nd
+            e[nd - 3] = _fit(mesh, m, shape[nd - 3])
+            e[nd - 1] = _fit(mesh, d_axes, shape[nd - 1])
+            return P(*e)
+        return last(m)
+    if p.endswith("w_down") or p.endswith("w_cv"):
+        if "moe/" in p and "shared" not in p:
+            e = [None] * nd
+            e[nd - 3] = _fit(mesh, m, shape[nd - 3])
+            e[nd - 2] = _fit(mesh, d_axes, shape[nd - 2])
+            return P(*e)
+        return at(nd - 2, m)
+    # rwkv time-mix projections (L, d, d): shard output heads
+    if any(p.endswith(f"layers/{w}") for w in ("w_r", "w_k", "w_v", "w_g")):
+        return last(m)
+    if p.endswith("layers/w_o") or p.endswith("layers/w_cr"):
+        return at(nd - 2, m)
+    # mamba / routers / norms / vectors / loras: replicated (DESIGN §6)
+    return P(*([None] * nd))
+
+
+def param_shardings(abstract_params, mesh: Mesh, cfg: ModelConfig):
+    """Tree of NamedSharding matching the params pytree."""
+
+    def walk(tree, prefix):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{prefix}/{k}") for k, v in tree.items()}
+        return NamedSharding(mesh, param_spec(prefix, tree.shape, mesh, cfg))
+
+    return walk(abstract_params, "")
+
+
+def opt_shardings(abstract_opt, param_shard_tree, mesh: Mesh):
+    """AdamW moments mirror the parameter shardings; step is replicated."""
+    from repro.training.optimizer import AdamWState
+    rep = NamedSharding(mesh, P())
+    return AdamWState(step=rep, mu=param_shard_tree, nu=param_shard_tree)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache / decision-plane state
+# ---------------------------------------------------------------------------
+
+
+def batch_shardings(abstract_batch, mesh: Mesh, batch_axes):
+    b = tuple(batch_axes) if batch_axes else None
+
+    def f(leaf):
+        e = [b] + [None] * (leaf.ndim - 1)
+        if b is None or leaf.shape[0] % _axis_size(mesh, b) != 0:
+            e[0] = None
+        return NamedSharding(mesh, P(*e))
+
+    return jax.tree_util.tree_map(f, abstract_batch)
+
+
+def cache_shardings(abstract_cache, mesh: Mesh, cfg: ModelConfig, batch_axes):
+    """KV cache (L|G, B, Sc, kv, hd): batch over batch_axes, Sc over model.
+    SSM states: batch over batch_axes; with B replicated, shard a head/state
+    dim over model instead."""
+    batch, model = _mesh_split(mesh)
+    m = model[0] if model else None
+    b = tuple(batch_axes) if batch_axes else None
+
+    def f(path, leaf):
+        name = "/".join(str(getattr(p, "key", p)) for p in path)
+        nd = leaf.ndim
+        if nd <= 1:
+            return NamedSharding(mesh, P())
+        e = [None] * nd
+        if b is not None and leaf.shape[1] % _axis_size(mesh, b) == 0:
+            e[1] = b
+        if name.endswith("k") or name.endswith("v"):
+            # (L|G, B, Sc, kv, hd): shard the cache sequence dim on model
+            e[2] = _fit(mesh, m, leaf.shape[2])
+        elif name == "ssm":
+            if e[1] is None:
+                # B replicated: shard heads (zamba) or the value dim (rwkv)
+                if leaf.shape[2] % _axis_size(mesh, (m,) if m else None) == 0:
+                    e[2] = _fit(mesh, m, leaf.shape[2])
+                else:
+                    e[4] = _fit(mesh, m, leaf.shape[4])
+        elif name in ("x_last_t", "x_last_c"):
+            e[2] = _fit(mesh, m, leaf.shape[2])
+        elif name == "conv":
+            e[3] = _fit(mesh, m, leaf.shape[3])
+        return NamedSharding(mesh, P(*e))
+
+    return jax.tree_util.tree_map_with_path(f, abstract_cache)
+
+
+def decision_state_shardings(abstract_state, mesh: Mesh, batch_axes,
+                             mode: str = "sequence_parallel"):
+    """Penalty histograms (B, V):
+
+    * sequence_parallel — batch over ALL axes (every chip a sampler, §5.1);
+    * hierarchical      — batch over batch axes, V over model (the state
+      lives with the logits shards; Eq. 5 updates are shard-local);
+    * vocab_gather      — batch over batch axes only (baseline).
+    """
+    batch, model = _mesh_split(mesh)
+    m = model[0] if model else None
+    if mode == "sequence_parallel":
+        axes = (tuple(batch_axes) if batch_axes else ()) + model
+    else:
+        axes = tuple(batch_axes) if batch_axes else ()
+    axes = axes or None
+
+    def f(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        e = [None] * leaf.ndim
+        if axes is not None and leaf.shape[0] % _axis_size(mesh, axes) == 0:
+            e[0] = axes
+        if mode == "hierarchical" and leaf.ndim >= 2:
+            e[-1] = _fit(mesh, m, leaf.shape[-1])
+        return NamedSharding(mesh, P(*e))
+
+    return jax.tree_util.tree_map(f, abstract_state)
+
+
+def replicated(mesh: Mesh, tree):
+    return jax.tree_util.tree_map(
+        lambda l: NamedSharding(mesh, P()), tree)

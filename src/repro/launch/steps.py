@@ -1,0 +1,159 @@
+"""The jitted programs the launchers and the dry-run lower.
+
+* ``make_train_step_program``  — forward+backward+AdamW   (train_4k)
+* ``make_prefill_program``     — prompt prefill + first-token decision
+  (prefill_32k)
+* ``make_serve_step_program``  — ONE decode token against the KV cache +
+  the full decision plane (decode_32k, long_500k)
+
+Each returns (fn, abstract_inputs, in_shardings, out_shardings) ready for
+``jax.jit(fn, ...).lower(*abstract_inputs).compile()``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import (ModelConfig, ShapeConfig, SHVSConfig, SamplingConfig,
+                          TrainConfig, model_for_shape)
+from repro.core.decision_plane import DecisionPlane
+from repro.core.sampling import SamplingParams
+from repro.core import penalties as pen
+from repro.launch import sharding as shd
+from repro.models.model import Model
+from repro.training.optimizer import adamw_init
+from repro.training.train_loop import make_train_step
+
+
+def _abstract(tree):
+    return jax.tree_util.tree_map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+
+
+def _decision_plane(cfg: ModelConfig, parallelism: str) -> DecisionPlane:
+    return DecisionPlane(
+        cfg.vocab_size, algorithm="shvs",
+        shvs=SHVSConfig(hot_size=min(32768, max(1024, cfg.vocab_size // 4))),
+        sampling_parallelism=parallelism, k_cap=min(1024, cfg.vocab_size))
+
+
+def _sampling_params_spec(mesh, batch_axes):
+    b = tuple(batch_axes) if batch_axes else None
+    return SamplingParams(*([NamedSharding(mesh, P(b))] * 7))
+
+
+def _abstract_sampling_params(B):
+    f = lambda dt: jax.ShapeDtypeStruct((B,), dt)
+    return SamplingParams(temperature=f(jnp.float32), top_k=f(jnp.int32),
+                          top_p=f(jnp.float32), min_p=f(jnp.float32),
+                          repetition_penalty=f(jnp.float32),
+                          presence_penalty=f(jnp.float32),
+                          frequency_penalty=f(jnp.float32))
+
+
+def make_train_step_program(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                            train_cfg: TrainConfig = TrainConfig()):
+    cfg = model_for_shape(cfg, shape)
+    model = Model(cfg)
+    batch_axes = shd.batch_axes_for(shape, mesh)
+    step = make_train_step(model, train_cfg)
+
+    a_params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    a_opt = jax.eval_shape(adamw_init, a_params)
+    B, S = shape.global_batch, shape.seq_len
+    a_batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+               "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    extra = model.input_specs(B, S, "train")
+    for k, v in extra.items():
+        if k != "tokens":
+            a_batch[k] = v
+
+    p_shard = shd.param_shardings(a_params, mesh, cfg)
+    o_shard = shd.opt_shardings(a_opt, p_shard, mesh)
+    b_shard = shd.batch_shardings(a_batch, mesh, batch_axes)
+    rep = NamedSharding(mesh, P())
+    out_shard = (p_shard, o_shard,
+                 jax.tree_util.tree_map(lambda _: rep,
+                                        {"loss": 0, "ce": 0, "z_loss": 0,
+                                         "moe_aux": 0, "ppl": 0, "lr": 0,
+                                         "grad_norm": 0}))
+    return (step, (a_params, a_opt, a_batch), (p_shard, o_shard, b_shard),
+            out_shard, batch_axes)
+
+
+def make_prefill_program(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                         parallelism: str = "sequence_parallel"):
+    cfg = model_for_shape(cfg, shape)
+    model = Model(cfg)
+    dp = _decision_plane(cfg, parallelism)
+    batch_axes = shd.batch_axes_for(shape, mesh)
+    B, S = shape.global_batch, shape.seq_len
+
+    def prefill_step(params, batch, cache, sparams):
+        logits, cache = model.prefill(params, batch, cache)
+        pstate = pen.init_state(B, cfg.vocab_size, batch["tokens"])
+        tokens, pstate, _ = dp.step(logits, pstate, sparams,
+                                    jnp.zeros((), jnp.int32))
+        return tokens, cache
+
+    a_params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    a_batch = model.input_specs(B, S, "prefill")
+    a_cache = jax.eval_shape(
+        lambda: model.init_cache(B, S, window=shape.window_override or None))
+    a_sp = _abstract_sampling_params(B)
+
+    p_shard = shd.param_shardings(a_params, mesh, cfg)
+    b_shard = shd.batch_shardings(a_batch, mesh, batch_axes)
+    c_shard = shd.cache_shardings(a_cache, mesh, cfg, batch_axes)
+    sp_shard = _sampling_params_spec(mesh, batch_axes)
+    tok_out = NamedSharding(mesh, P(tuple(batch_axes) if batch_axes else None))
+    return (prefill_step, (a_params, a_batch, a_cache, a_sp),
+            (p_shard, b_shard, c_shard, sp_shard), (tok_out, c_shard),
+            batch_axes)
+
+
+def make_serve_step_program(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                            parallelism: str = "sequence_parallel",
+                            algorithm: str = "shvs"):
+    """One decode iteration: forward one token + full decision plane."""
+    cfg = model_for_shape(cfg, shape)
+    model = Model(cfg)
+    dp = _decision_plane(cfg, parallelism)
+    dp.algorithm = algorithm
+    batch_axes = shd.batch_axes_for(shape, mesh)
+    B, S = shape.global_batch, shape.seq_len
+
+    def serve_step(params, cache, pstate, last_tokens, sparams, step_idx):
+        logits, cache = model.decode_step(params, last_tokens, cache)
+        tokens, pstate, _ = dp.step(logits, pstate, sparams, step_idx)
+        return tokens, cache, pstate
+
+    a_params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    a_cache = jax.eval_shape(
+        lambda: model.init_cache(B, S, window=shape.window_override or None))
+    a_pstate = jax.eval_shape(lambda: pen.init_state(B, cfg.vocab_size))
+    a_tok = jax.ShapeDtypeStruct((B,), jnp.int32)
+    a_sp = _abstract_sampling_params(B)
+    a_step = jax.ShapeDtypeStruct((), jnp.int32)
+
+    p_shard = shd.param_shardings(a_params, mesh, cfg)
+    c_shard = shd.cache_shardings(a_cache, mesh, cfg, batch_axes)
+    st_shard = shd.decision_state_shardings(a_pstate, mesh, batch_axes,
+                                            mode=parallelism)
+    b_entry = tuple(batch_axes) if batch_axes else None
+    tok_shard = NamedSharding(mesh, P(b_entry))
+    sp_shard = _sampling_params_spec(mesh, batch_axes)
+    rep = NamedSharding(mesh, P())
+    return (serve_step,
+            (a_params, a_cache, a_pstate, a_tok, a_sp, a_step),
+            (p_shard, c_shard, st_shard, tok_shard, sp_shard, rep),
+            (tok_shard, c_shard, st_shard), batch_axes)
+
+
+def program_for(kind: str):
+    return {"train": make_train_step_program,
+            "prefill": make_prefill_program,
+            "decode": make_serve_step_program}[kind]

@@ -1,0 +1,53 @@
+"""Training driver: train a model on the synthetic Zipf pipeline.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --reduced \
+        --steps 100
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.config import ARCH_IDS, TrainConfig, get_arch
+from repro.training import Trainer
+from repro.training.checkpoint import save_checkpoint
+from repro.training.data import DataConfig, PrefetchLoader, SyntheticDataset
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS), default="smollm-360m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    tc = TrainConfig(learning_rate=args.lr, warmup_steps=max(args.steps // 10, 5),
+                     total_steps=args.steps)
+    trainer = Trainer(cfg, tc)
+    n = sum(x.size for x in jax.tree_util.tree_leaves(trainer.params))
+    print(f"training {cfg.name}: {n / 1e6:.1f}M params, {args.steps} steps")
+    ds = SyntheticDataset(DataConfig(vocab_size=cfg.vocab_size,
+                                     seq_len=args.seq_len,
+                                     batch_size=args.batch))
+    loader = PrefetchLoader(ds)
+    try:
+        hist = trainer.fit(loader, steps=args.steps, log_every=10)
+    finally:
+        loader.close()
+    print(f"final loss {hist[-1]['loss']:.4f} (ppl {hist[-1]['ppl']:.1f})")
+    if args.ckpt:
+        save_checkpoint(args.ckpt, trainer.params, trainer.opt_state,
+                        step=args.steps)
+        print(f"checkpoint saved to {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Model substrate: all six assigned architecture families in pure JAX."""
+from repro.models.model import Model  # noqa: F401

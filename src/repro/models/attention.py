@@ -1,0 +1,286 @@
+"""Attention: GQA with RoPE, optional qk-norm and sliding window.
+
+Three execution paths, all numerically equivalent:
+
+* ``attend_full``    — direct masked softmax; used when S is small.
+* ``attend_chunked`` — flash-style two-level blocked attention (scan over
+  query blocks; inner scan over KV blocks with running (m, l, acc)). Keeps
+  the HLO's peak temp memory at O(Bq*Bk) instead of O(S^2); used for the
+  long prefill/train shapes. This is the TPU-native analogue of an
+  IO-aware attention kernel at the XLA level.
+* ``attend_decode``  — one query token against a KV cache with a length mask.
+
+KV caches are per-layer ``(B, S_max, kv_heads, head_dim)``; sliding-window
+archs keep a ring buffer of ``window`` entries (so a 500k-token context costs
+O(window) memory, which is what makes ``long_500k`` lowerable for dense
+archs).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import dist
+from repro.models.layers import apply_rope, dense_init, rms_norm
+
+NEG_INF = -1e30
+
+
+class AttnParams(NamedTuple):
+    pass  # attention params live in plain dicts; kept for type clarity
+
+
+def init_attention(key, cfg: ModelConfig, stacked: int = 0, cross: bool = False):
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    nh, nkv = cfg.num_heads, cfg.num_kv_heads
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+
+    def mk(k, i, o):
+        if stacked:
+            import repro.models.layers as L
+            return L.stacked_dense_init(k, stacked, i, o, dtype)
+        return dense_init(k, i, o, dtype)
+
+    p = {
+        "w_q": mk(ks[0], d, nh * hd),
+        "w_k": mk(ks[1], d, nkv * hd),
+        "w_v": mk(ks[2], d, nkv * hd),
+        "w_o": mk(ks[3], nh * hd, d),
+    }
+    if cfg.qk_norm:
+        shape = (stacked, hd) if stacked else (hd,)
+        p["q_norm"] = jnp.ones(shape, dtype)
+        p["k_norm"] = jnp.ones(shape, dtype)
+    return p
+
+
+def _project_qkv(params, x, x_kv, cfg: ModelConfig, positions, kv_positions=None,
+                 rope: bool = True):
+    """Project to q/k/v, apply qk-norm + RoPE. Returns (q, k, v) with shapes
+    (B, Sq, nh, hd), (B, Skv, nkv, hd), (B, Skv, nkv, hd)."""
+    hd = cfg.resolved_head_dim
+    nh, nkv = cfg.num_heads, cfg.num_kv_heads
+    B, Sq = x.shape[0], x.shape[1]
+    Skv = x_kv.shape[1]
+    q = jnp.einsum("bsd,dh->bsh", x, params["w_q"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    k = jnp.einsum("bsd,dh->bsh", x_kv, params["w_k"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    v = jnp.einsum("bsd,dh->bsh", x_kv, params["w_v"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    q = q.reshape(B, Sq, nh, hd)
+    k = k.reshape(B, Skv, nkv, hd)
+    v = v.reshape(B, Skv, nkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.rmsnorm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.rmsnorm_eps)
+    if rope and cfg.rope_theta > 0:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        kp = kv_positions if kv_positions is not None else positions
+        k = apply_rope(k, kp, cfg.rope_theta)
+    return q, k, v
+
+
+def _expand_gqa(q, nkv: int):
+    """(B, S, nh, hd) -> (B, S, nkv, group, hd)."""
+    B, S, nh, hd = q.shape
+    return q.reshape(B, S, nkv, nh // nkv, hd)
+
+
+def _attend_scores_softmax(q, k, v, mask, scale):
+    """q: (B,Sq,nkv,g,hd)  k/v: (B,Skv,nkv,hd)  mask: (B|1,1,Sq,Skv) bool."""
+    scores = jnp.einsum("bqngh,bknh->bngqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = jnp.where(mask[:, :, None, :, :] if mask.ndim == 4 else mask,
+                       scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bngqk,bknh->bqngh", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32).astype(v.dtype)
+    return out
+
+
+def attend_full(q, k, v, *, causal: bool, window: int, q_offset=0,
+                kv_len: Optional[jnp.ndarray] = None):
+    """Direct attention. q: (B,Sq,nkv,g,hd); k,v: (B,Skv,nkv,hd)."""
+    B, Sq = q.shape[0], q.shape[1]
+    Skv = k.shape[1]
+    hd = q.shape[-1]
+    scale = 1.0 / math.sqrt(hd)
+    qi = jnp.arange(Sq)[:, None] + q_offset
+    kj = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kj <= qi
+    if window:
+        mask &= kj > qi - window
+    mask = jnp.broadcast_to(mask[None, :, :], (B, Sq, Skv))
+    if kv_len is not None:
+        mask &= kj[None] < kv_len[:, None, None]
+    mask = mask[:, None, :, :]  # (B, 1, Sq, Skv)
+    return _attend_scores_softmax(q, k, v, mask, scale)
+
+
+def attend_chunked(q, k, v, *, causal: bool, window: int, chunk_q: int = 512,
+                   chunk_k: int = 512):
+    """Flash-style blocked attention with running max/sum.
+
+    Shapes as in attend_full. Non-multiple sequence lengths are padded at
+    the end (causal masking makes the pad keys invisible to real queries;
+    pad query rows are sliced off).
+    """
+    Sq_real, Skv_real = q.shape[1], k.shape[1]
+    pq = (-Sq_real) % chunk_q
+    pk = (-Skv_real) % chunk_k
+    if pq or pk:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        out = attend_chunked(q, k, v, causal=causal, window=window,
+                             chunk_q=chunk_q, chunk_k=chunk_k)
+        return out[:, :Sq_real]
+    B, Sq, nkv, g, hd = q.shape
+    Skv = k.shape[1]
+    nq, nk = Sq // chunk_q, Skv // chunk_k
+    scale = 1.0 / math.sqrt(hd)
+
+    qc = q.reshape(B, nq, chunk_q, nkv, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    kc = k.reshape(B, nk, chunk_k, nkv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nk, chunk_k, nkv, hd).transpose(1, 0, 2, 3, 4)
+
+    def q_block(qi, q_blk):
+        # running accumulators over kv blocks
+        m0 = jnp.full((B, nkv, g, chunk_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, nkv, g, chunk_q), jnp.float32)
+        a0 = jnp.zeros((B, nkv, g, chunk_q, hd), jnp.float32)
+
+        def kv_block(carry, inp):
+            m, l, acc = carry
+            kj, k_blk, v_blk = inp
+            s = jnp.einsum("bqngh,bknh->bngqk", q_blk, k_blk,
+                           preferred_element_type=jnp.float32) * scale
+            # block-level mask
+            qpos = qi * chunk_q + jnp.arange(chunk_q)[:, None]
+            kpos = kj * chunk_k + jnp.arange(chunk_k)[None, :]
+            msk = jnp.ones((chunk_q, chunk_k), bool)
+            if causal:
+                msk &= kpos <= qpos
+            if window:
+                msk &= kpos > qpos - window
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bngqk,bknh->bngqh", p, v_blk.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        ks_idx = jnp.arange(nk)
+        (m, l, acc), _ = jax.lax.scan(kv_block, (m0, l0, a0), (ks_idx, kc, vc))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.transpose(0, 3, 1, 2, 4)  # (B, chunk_q, nkv, g, hd)
+
+    outs = jax.lax.map(lambda args: q_block(*args), (jnp.arange(nq), qc))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, nkv, g, hd)
+    return out.astype(v.dtype)
+
+
+def attend_decode(q, cache_k, cache_v, kv_len, *, window: int = 0,
+                  ring: bool = False):
+    """Single-step decode attention.
+
+    q: (B, 1, nkv, g, hd); cache_k/v: (B, S_cache, nkv, hd);
+    kv_len: (B,) number of valid entries. With ``ring=True`` the cache is a
+    ring buffer (sliding window) and every slot < min(len, S_cache) is valid.
+    """
+    B, _, nkv, g, hd = q.shape
+    S = cache_k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("bngh,bknh->bngk", q.squeeze(1), cache_k,
+                        preferred_element_type=jnp.float32) * scale
+    kj = jnp.arange(S)[None, :]
+    valid = kj < jnp.minimum(kv_len, S)[:, None] if ring else kj < kv_len[:, None]
+    if window and not ring:
+        valid &= kj >= (kv_len[:, None] - window)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bngk,bknh->bngh", probs.astype(cache_v.dtype), cache_v,
+                     preferred_element_type=jnp.float32)
+    return out[:, None].astype(cache_v.dtype)  # (B, 1, nkv, g, hd)
+
+
+# ---------------------------------------------------------------------------
+# Full attention block (projection + attend + output)
+# ---------------------------------------------------------------------------
+
+
+def attention_block(params, x, cfg: ModelConfig, positions, *,
+                    cache_k=None, cache_v=None, kv_len=None,
+                    mode: str = "train", window: Optional[int] = None,
+                    chunk_threshold: int = 4096):
+    """Self-attention for train/prefill/decode.
+
+    Returns (out, new_k, new_v): new_k/new_v are this call's K/V entries
+    (B, Sq, nkv, hd) for the cache manager to store.
+    """
+    window = cfg.sliding_window if window is None else window
+    nkv = cfg.num_kv_heads
+    B, Sq, _ = x.shape
+    q, k, v = _project_qkv(params, x, x, cfg, positions)
+    qg = _expand_gqa(q, nkv)
+    # NOTE: no sharding constraint here. An earlier revision constrained
+    # (B, S, nkv, g, hd) with the model axis on nkv, which is not divisible
+    # for GQA configs (e.g. kv=8 on a 16-way axis) and forced GSPMD into
+    # replicate-then-slice remats: ~15k all-gathers per train step on
+    # qwen3-8b. Propagation from the TP-sharded projections is both correct
+    # and cheap — see EXPERIMENTS.md §Perf iteration 3.
+
+    if mode == "decode":
+        assert Sq == 1
+        out = attend_decode(qg, cache_k, cache_v, kv_len,
+                            window=window, ring=bool(window))
+    elif x.shape[1] >= chunk_threshold:
+        out = attend_chunked(qg, k, v, causal=True, window=window)
+    else:
+        out = attend_full(qg, k, v, causal=True, window=window)
+    out = out.reshape(B, Sq, cfg.num_heads * cfg.resolved_head_dim)
+    # row-parallel output projection: bf16 partial sums -> bf16 TP
+    # all-reduce (§Perf iteration 3b)
+    out = jnp.einsum("bsh,hd->bsd", out, params["w_o"],
+                     preferred_element_type=out.dtype).astype(x.dtype)
+    return out, k, v
+
+
+def cross_attention_block(params, x, enc_kv, cfg: ModelConfig):
+    """Cross-attention (whisper decoder). enc_kv: precomputed (k, v) from the
+    encoder output, shapes (B, S_enc, nkv, hd)."""
+    nkv = cfg.num_kv_heads
+    B, Sq, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, params["w_q"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    q = q.reshape(B, Sq, cfg.num_heads, hd)
+    qg = _expand_gqa(q, nkv)
+    k, v = enc_kv
+    out = attend_full(qg, k, v, causal=False, window=0)
+    out = out.reshape(B, Sq, cfg.num_heads * hd)
+    return jnp.einsum("bsh,hd->bsd", out, params["w_o"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def project_enc_kv(params, enc_out, cfg: ModelConfig):
+    """Project encoder output into the decoder's cross-attention K/V."""
+    B, S, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    nkv = cfg.num_kv_heads
+    k = jnp.einsum("bsd,dh->bsh", enc_out, params["w_k"],
+                   preferred_element_type=jnp.float32).astype(enc_out.dtype)
+    v = jnp.einsum("bsd,dh->bsh", enc_out, params["w_v"],
+                   preferred_element_type=jnp.float32).astype(enc_out.dtype)
+    return k.reshape(B, S, nkv, hd), v.reshape(B, S, nkv, hd)

@@ -1,0 +1,145 @@
+"""Shared neural-net building blocks: norms, RoPE, MLPs, embeddings.
+
+Parameters are plain dict pytrees of jnp arrays; ``init_*`` functions build
+them, ``apply_*``/lowercase functions consume them. All matmuls accumulate in
+float32 (``preferred_element_type``) when params are bf16.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+
+
+def stacked_dense_init(key, num: int, in_dim: int, out_dim: int, dtype,
+                       scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (num, in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+
+
+def matmul(x, w):
+    """x @ w with f32 accumulation."""
+    return jnp.einsum("...d,df->...f", x, w,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, weight, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float):
+    """Inverse frequencies for rotary embeddings (half-dim)."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """Rotate pairs. x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    if theta <= 0:
+        return x
+    head_dim = x.shape[-1]
+    inv_freq = rope_frequencies(head_dim, theta)          # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * inv_freq  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]                # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GELU / squared-ReLU)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None, stacked: int = 0):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    mk = (lambda k, i, o: stacked_dense_init(k, stacked, i, o, dtype)) if stacked \
+        else (lambda k, i, o: dense_init(k, i, o, dtype))
+    if cfg.act == "silu":
+        return {"w_gate": mk(ks[0], d, f), "w_up": mk(ks[1], d, f),
+                "w_down": mk(ks[2], f, d)}
+    return {"w_up": mk(ks[1], d, f), "w_down": mk(ks[2], f, d)}
+
+
+def apply_mlp(params, x, act: str):
+    if act == "silu":
+        gate = matmul(x, params["w_gate"])
+        up = matmul(x, params["w_up"])
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    elif act == "gelu":
+        h = jax.nn.gelu(matmul(x, params["w_up"]).astype(jnp.float32),
+                        approximate=True).astype(x.dtype)
+    elif act == "relu_sq":
+        h = jnp.square(jax.nn.relu(matmul(x, params["w_up"])))
+    else:
+        raise ValueError(f"unknown act {act!r}")
+    # row-parallel projection: emit the activation dtype so the TP partial
+    # sum is all-reduced in bf16, not f32 (halves the dominant train
+    # collective; the MXU accumulates in f32 internally regardless) —
+    # EXPERIMENTS.md §Perf iteration 3b
+    return jnp.einsum("...f,fd->...d", h, params["w_down"],
+                      preferred_element_type=h.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / LM head
+# ---------------------------------------------------------------------------
+
+
+def init_embeddings(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    k1, k2 = jax.random.split(key)
+    p = {"tok": (jax.random.normal(k1, (cfg.vocab_size, cfg.d_model), jnp.float32)
+                 * 0.02).astype(dtype)}
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(k2, cfg.d_model, cfg.vocab_size, dtype)
+    return p
+
+
+def embed(params, tokens):
+    return jnp.take(params["tok"], tokens, axis=0)
+
+
+def lm_head(params, x):
+    w = params.get("head")
+    if w is None:
+        w = params["tok"].T
+    return jnp.einsum("...d,dv->...v", x, w,
+                      preferred_element_type=jnp.float32)

@@ -1,0 +1,169 @@
+"""Model facade: a uniform interface over all six architecture families.
+
+    model = Model(cfg)
+    params = model.init(key)
+    logits, aux = model.train_logits(params, batch)          # (B, S, V)
+    logits, cache = model.prefill(params, batch, cache)      # (B, V) last-pos
+    logits, cache = model.decode_step(params, tokens, cache) # (B, V)
+
+``batch`` is a dict: always ``tokens (B, S) int32``; VLM adds
+``patch_embeds (B, P, d)``; audio adds ``frames (B, F, d)`` (the stubbed
+modality frontends per the assignment carve-out).
+
+Logits leave the LM head sharded ``(B@batch_axes, V@model_axes)`` — the
+paper's starting condition for the decision plane.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import dist
+from repro.models.layers import embed, init_embeddings, lm_head
+from repro.models.transformer import (apply_dense_stack, apply_encoder,
+                                      apply_rwkv_stack, apply_zamba_stack,
+                                      cache_len_for, init_cache,
+                                      init_dense_stack, init_encoder,
+                                      init_rwkv_stack, init_zamba_stack)
+
+_DENSE_FAMILIES = ("dense", "moe", "vlm", "audio")
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # -- init ---------------------------------------------------------------
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        k_emb, k_stack, k_enc, k_pos = jax.random.split(key, 4)
+        params = {"emb": init_embeddings(k_emb, cfg)}
+        if cfg.family in _DENSE_FAMILIES:
+            params["stack"] = init_dense_stack(k_stack, cfg)
+        elif cfg.family == "ssm":
+            params["stack"] = init_rwkv_stack(k_stack, cfg)
+        elif cfg.family == "hybrid":
+            params["stack"] = init_zamba_stack(k_stack, cfg)
+        else:
+            raise ValueError(cfg.family)
+        if cfg.is_encdec:
+            params["encoder"] = init_encoder(k_enc, cfg)
+            # whisper: learned decoder positions (sized generously; sliced)
+            params["dec_pos"] = (0.02 * jax.random.normal(
+                k_pos, (32768, cfg.d_model), jnp.float32)).astype(cfg.dtype)
+        return params
+
+    def init_cache(self, batch: int, seq_len: int, window=None, dtype=None):
+        return init_cache(self.cfg, batch, seq_len, window, dtype)
+
+    # -- embedding / input assembly ------------------------------------------
+    def _embed_inputs(self, params, batch, lens=None):
+        """Returns (x (B,S,d), positions (B,S), enc_out or None).
+
+        ``lens``: per-sequence current lengths (decode); None for fresh
+        prefill/train (positions start at 0).
+        """
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = embed(params["emb"], tokens)
+        B, S = tokens.shape
+        enc_out = None
+        if cfg.family == "vlm" and "patch_embeds" in batch:
+            pe = batch["patch_embeds"].astype(x.dtype)
+            x = jnp.concatenate([pe, x], axis=1)
+            S = x.shape[1]
+        if cfg.is_encdec and "frames" in batch:
+            enc_out = apply_encoder(params["encoder"], batch["frames"], cfg)
+        if lens is None:
+            positions = jnp.broadcast_to(
+                jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+        else:
+            positions = lens[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+        if cfg.is_encdec:
+            # learned decoder positions (RoPE disabled via rope_theta=0)
+            npos = params["dec_pos"].shape[0]
+            pos_emb = jnp.take(params["dec_pos"],
+                               jnp.minimum(positions, npos - 1), axis=0)
+            x = x + pos_emb.astype(x.dtype)
+        x = dist.constrain(x, dist.batch_spec_entry(), None, None)
+        return x, positions, enc_out
+
+    def _stack(self, params, x, positions, cache, mode, window=None,
+               remat=False, enc_out=None):
+        cfg = self.cfg
+        if cfg.family in _DENSE_FAMILIES:
+            return apply_dense_stack(params["stack"], x, positions, cfg, cache,
+                                     mode, window=window, remat=remat,
+                                     enc_out=enc_out)
+        if cfg.family == "ssm":
+            return apply_rwkv_stack(params["stack"], x, positions, cfg, cache,
+                                    mode, window=window, remat=remat)
+        return apply_zamba_stack(params["stack"], x, positions, cfg, cache,
+                                 mode, window=window, remat=remat)
+
+    def _logits(self, params, y):
+        logits = lm_head(params["emb"], y)
+        return dist.constrain(logits, dist.batch_spec_entry(), None,
+                              dist.model_spec_entry()) if logits.ndim == 3 else \
+            dist.constrain(logits, dist.batch_spec_entry(),
+                           dist.model_spec_entry())
+
+    # -- entry points ---------------------------------------------------------
+    def train_logits(self, params, batch, remat: bool = True):
+        """Full-sequence logits for training. Returns (logits (B,S,V), aux)."""
+        x, positions, enc_out = self._embed_inputs(params, batch)
+        y, _, aux = self._stack(params, x, positions, None, "train",
+                                remat=remat, enc_out=enc_out)
+        if self.cfg.family == "vlm" and "patch_embeds" in batch:
+            y = y[:, batch["patch_embeds"].shape[1]:]   # loss on text positions
+        return self._logits(params, y), aux
+
+    def prefill(self, params, batch, cache, window=None, true_lens=None):
+        """Process prompts (fresh rows). Returns (last-pos logits (B,V), cache).
+
+        ``true_lens``: per-row prompt lengths when the batch is right-padded;
+        logits are taken at position true_len-1 and cache["len"] is set to it.
+        """
+        x, positions, enc_out = self._embed_inputs(params, batch)
+        y, cache, _ = self._stack(params, x, positions, cache, "prefill",
+                                  window=window, enc_out=enc_out)
+        if true_lens is not None:
+            B = y.shape[0]
+            off = (0 if self.cfg.family != "vlm" or "patch_embeds" not in batch
+                   else batch["patch_embeds"].shape[1])
+            idx = jnp.clip(off + true_lens - 1, 0, y.shape[1] - 1)
+            y_last = y[jnp.arange(B), idx]
+            cache = dict(cache)
+            cache["len"] = jnp.zeros_like(cache["len"]) + off + true_lens
+        else:
+            y_last = y[:, -1]
+        return self._logits(params, y_last), cache
+
+    def decode_step(self, params, tokens, cache, window=None):
+        """One decode iteration. tokens: (B,) or (B,1). Returns
+        (logits (B, V), cache)."""
+        if tokens.ndim == 1:
+            tokens = tokens[:, None]
+        x, positions, _ = self._embed_inputs(params, {"tokens": tokens},
+                                             lens=cache["len"])
+        y, cache, _ = self._stack(params, x, positions, cache, "decode",
+                                  window=window)
+        return self._logits(params, y[:, -1]), cache
+
+    # -- input specs for the dry-run -------------------------------------------
+    def input_specs(self, batch: int, seq_len: int, kind: str):
+        """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        toks = jax.ShapeDtypeStruct((batch, seq_len), jnp.int32)
+        specs = {"tokens": toks}
+        if cfg.family == "vlm" and kind != "decode":
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (batch, cfg.frontend.num_embeddings, cfg.d_model), dt)
+        if cfg.is_encdec and kind != "decode":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (batch, cfg.encoder.num_frames, cfg.d_model), dt)
+        return specs

@@ -1,0 +1,304 @@
+"""Mixture-of-Experts FFN with expert parallelism.
+
+Two execution paths with identical semantics:
+
+* **local** (no mesh): capacity-bucketed gather/scatter dispatch on one
+  device — used by smoke tests and small examples.
+* **expert-parallel** (mesh): experts are sharded over the ``model`` mesh
+  axes via ``shard_map``. Every model shard sees the (batch-sharded) token
+  block, routes it, computes only its local experts' contribution, and the
+  partial outputs are combined with a single ``psum`` over the model axes —
+  the same collective cost as a Megatron TP FFN all-reduce, with no
+  token all-to-all and no global sort. Load balance relies on the router
+  (aux loss in training), matching standard EP practice.
+
+Dispatch uses capacity buckets (C = ceil(T*k/E * capacity_factor)) with
+deterministic cumsum slot assignment; overflowing tokens are dropped (their
+combine weight is zero), the standard Switch/GShard behaviour.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.models import dist
+from repro.models.layers import apply_mlp, dense_init, init_mlp, stacked_dense_init
+
+
+def init_moe(key, cfg: ModelConfig, stacked: int = 0):
+    assert cfg.moe is not None
+    d, m = cfg.d_model, cfg.moe
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+
+    def mk_expert(k, i, o):
+        shape = (stacked, m.num_experts, i, o) if stacked else (m.num_experts, i, o)
+        scale = 1.0 / math.sqrt(i)
+        return (jax.random.normal(k, shape, jnp.float32) * scale).astype(dtype)
+
+    p = {
+        "router": (stacked_dense_init(ks[0], stacked, d, m.num_experts, jnp.float32)
+                   if stacked else dense_init(ks[0], d, m.num_experts, jnp.float32)),
+        "w_gate": mk_expert(ks[1], d, m.d_ff_expert),
+        "w_up": mk_expert(ks[2], d, m.d_ff_expert),
+        "w_down": mk_expert(ks[3], m.d_ff_expert, d),
+    }
+    if m.shared_expert_d_ff:
+        p["shared"] = init_mlp(ks[4], cfg, d_ff=m.shared_expert_d_ff, stacked=stacked)
+    return p
+
+
+def _route(router_w, x_flat, num_experts: int, top_k: int):
+    """Router: returns (ids (T,k) int32, gates (T,k) f32, probs (T,E) f32)."""
+    logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32), router_w)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return ids.astype(jnp.int32), gates, probs
+
+
+def _aux_loss(probs, ids, num_experts: int):
+    """Switch-style load-balance loss: E * sum_e f_e * P_e."""
+    T = probs.shape[0]
+    assign = jax.nn.one_hot(ids[:, 0], num_experts, dtype=jnp.float32)
+    f = assign.mean(0)                       # fraction routed (top-1 proxy)
+    pbar = probs.mean(0)
+    return num_experts * jnp.sum(f * pbar)
+
+
+def _expert_compute(x_buf, w_gate, w_up, w_down, act: str):
+    """Batched per-expert MLP: x_buf (E, C, d) -> (E, C, d)."""
+    if act == "silu":
+        g = jnp.einsum("ecd,edf->ecf", x_buf, w_gate,
+                       preferred_element_type=jnp.float32).astype(x_buf.dtype)
+        u = jnp.einsum("ecd,edf->ecf", x_buf, w_up,
+                       preferred_element_type=jnp.float32).astype(x_buf.dtype)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x_buf.dtype) * u
+    else:
+        u = jnp.einsum("ecd,edf->ecf", x_buf, w_up,
+                       preferred_element_type=jnp.float32)
+        h = jax.nn.gelu(u, approximate=True).astype(x_buf.dtype)
+    return jnp.einsum("ecf,efd->ecd", h, w_down,
+                      preferred_element_type=jnp.float32).astype(x_buf.dtype)
+
+
+def _dispatch_compute_combine(x_flat, ids, gates, w_gate, w_up, w_down,
+                              num_experts: int, capacity: int, act: str):
+    """Capacity-bucket dispatch -> per-expert MLP -> weighted combine.
+
+    x_flat: (T, d); ids/gates: (T, k). Experts indexed 0..num_experts-1
+    (callers translate to local ids for the EP path). ids < 0 mean
+    "not mine / invalid" and are dropped.
+    """
+    T, k = ids.shape
+    d = x_flat.shape[-1]
+    ids_flat = ids.reshape(T * k)
+    gates_flat = gates.reshape(T * k)
+    valid = ids_flat >= 0
+    safe_ids = jnp.where(valid, ids_flat, 0)
+    # deterministic slot assignment: position among earlier tokens of the
+    # same expert (cumsum of one-hot minus self)
+    oh = jax.nn.one_hot(safe_ids, num_experts, dtype=jnp.int32)
+    oh = oh * valid[:, None]
+    pos = jnp.take_along_axis(jnp.cumsum(oh, axis=0) - oh,
+                              safe_ids[:, None], axis=1)[:, 0]
+    keep = valid & (pos < capacity)
+    slot = jnp.where(keep, pos, capacity)    # capacity index == out of bounds
+    # scatter tokens into (E, C, d) buckets; OOB rows dropped
+    x_rep = jnp.take(x_flat, jnp.arange(T * k) // k, axis=0)
+    buf = jnp.zeros((num_experts, capacity, d), x_flat.dtype)
+    buf = buf.at[safe_ids, slot].set(x_rep, mode="drop")
+    out_buf = _expert_compute(buf, w_gate, w_up, w_down, act)
+    # gather back + weighted combine over the k slots
+    y = out_buf.at[safe_ids, slot].get(mode="fill", fill_value=0.0)
+    y = y * (gates_flat * keep).astype(y.dtype)[:, None]
+    return y.reshape(T, k, d).sum(axis=1)
+
+
+def _capacity(tokens: int, k: int, num_experts: int, factor: float) -> int:
+    c = int(math.ceil(tokens * k / num_experts * factor))
+    return max(8, min(tokens * k, c))
+
+
+def apply_moe(params, x, cfg: ModelConfig, *, train: bool = False):
+    """MoE FFN. x: (B, S, d). Returns (out, aux_loss scalar f32).
+
+    Distributed strategy (chosen by traffic napkin math, EXPERIMENTS.md
+    §Perf iteration 2):
+    * weights-stationary ("gather"): experts' FSDP-sharded hidden dim is
+      all-gathered at use (ZeRO-3). Collective bytes ∝ expert weights.
+      Right for training/prefill where tokens ≫ weights.
+    * activations-moving ("scatter"): tokens are all-gathered over the FSDP
+      axis, each shard computes only its f-slice, and partial outputs
+      reduce-scatter back. Collective bytes ∝ 2·tokens·d. Right for decode,
+      where 128 tokens would otherwise drag 2 GB of expert weights per
+      layer through the interconnect.
+    """
+    m = cfg.moe
+    B, S, d = x.shape
+    ctx = dist.get_ctx()
+    ep = ctx.axis_size(ctx.model_axes)
+    if ctx.active and ep > 1 and m.num_experts % ep == 0:
+        if _prefer_scatter(x, cfg, ctx):
+            out, aux = _apply_moe_ep_scatter(params, x, cfg, ep)
+        else:
+            out, aux = _apply_moe_ep(params, x, cfg, ep)
+    else:
+        x_flat = x.reshape(B * S, d)
+        ids, gates, probs = _route(params["router"], x_flat, m.num_experts, m.top_k)
+        cap = _capacity(B * S, m.top_k, m.num_experts, m.capacity_factor)
+        out = _dispatch_compute_combine(
+            x_flat, ids, gates, params["w_gate"], params["w_up"],
+            params["w_down"], m.num_experts, cap, cfg.act)
+        aux = _aux_loss(probs, ids, m.num_experts)
+        out = out.reshape(B, S, d)
+    if "shared" in params:
+        out = out + apply_mlp(params["shared"], x, cfg.act)
+    return out, aux * (m.aux_loss_weight if train else 0.0)
+
+
+def _fsdp_axis(ctx):
+    """The FSDP storage axes for expert weights (all batch axes)."""
+    baxes = tuple(ctx.batch_axes or ())
+    return baxes or None
+
+
+def _fsdp_size(ctx) -> int:
+    axes = _fsdp_axis(ctx)
+    if not axes:
+        return 1
+    n = 1
+    for a in axes:
+        n *= ctx.mesh.shape[a]
+    return n
+
+
+def _prefer_scatter(x, cfg: ModelConfig, ctx) -> bool:
+    """Traffic model: activations-moving wins when 2·tokens·d·bytes is less
+    than the per-chip FSDP expert-weight gather. REPRO_MOE_STRATEGY
+    ∈ {auto, gather, scatter} overrides (used by the §Perf ablation)."""
+    import os
+    force = os.environ.get("REPRO_MOE_STRATEGY", "auto")
+    ax = _fsdp_axis(ctx)
+    if force == "gather" or ax is None:
+        return False
+    fsdp = _fsdp_size(ctx)
+    if force == "scatter":
+        return fsdp > 1 and cfg.moe.d_ff_expert % fsdp == 0
+    if fsdp <= 1 or cfg.moe.d_ff_expert % fsdp != 0:
+        return False
+    B, S, d = x.shape
+    itemsize = jnp.dtype(x.dtype).itemsize
+    tokens_traffic = 2 * B * S * d * itemsize
+    e_loc = cfg.moe.num_experts // max(ctx.axis_size(ctx.model_axes), 1)
+    weight_traffic = (3 * e_loc * d * cfg.moe.d_ff_expert * itemsize
+                      * (fsdp - 1) // fsdp)
+    return tokens_traffic < weight_traffic
+
+
+def _apply_moe_ep_scatter(params, x, cfg: ModelConfig, ep: int):
+    """Activations-moving expert parallelism (decode-optimized).
+
+    Tokens are all-gathered over the FSDP axis; every (fsdp, model) shard
+    computes its local experts' contribution using only its LOCAL f-slice
+    of the expert weights (never gathering them); partial outputs are
+    reduce-scattered back over the FSDP axis and psum'd over model.
+    """
+    m = cfg.moe
+    ctx = dist.get_ctx()
+    mesh = ctx.mesh
+    B, S, d = x.shape
+    e_local = m.num_experts // ep
+    bspec = dist.batch_spec_entry()
+    mspec = dist.model_spec_entry()
+    model_axes = tuple(ctx.model_axes)
+    fsdp_ax = _fsdp_axis(ctx)          # tuple of all batch axes
+    baxes = tuple(ctx.batch_axes or ())
+    # tokens per shard after gathering over every fsdp axis: the full batch
+    T_gathered = B * S
+    cap = _capacity(T_gathered, m.top_k, m.num_experts, m.capacity_factor)
+
+    def shard_fn(x_blk, router_w, w_gate, w_up, w_down):
+        # gather tokens over the FSDP axis only (pod stays sharded)
+        x_all = jax.lax.all_gather(x_blk, fsdp_ax, axis=0, tiled=True)
+        b, s, _ = x_all.shape
+        x_flat = x_all.reshape(b * s, d)
+        ids, gates, probs = _route(router_w, x_flat, m.num_experts, m.top_k)
+        r = 0
+        for ax in model_axes:
+            r = r * mesh.shape[ax] + jax.lax.axis_index(ax)
+        offset = r * e_local
+        local = ids - offset
+        local = jnp.where((local >= 0) & (local < e_local), local, -1)
+        # local f-slice expert compute; partial over the f dimension
+        y = _dispatch_compute_combine(
+            x_flat, local, gates, w_gate, w_up, w_down, e_local, cap,
+            cfg.act)
+        y = y.reshape(b, s, d)
+        # sum f-slice partials + return each token to its home shard
+        y = jax.lax.psum_scatter(y, fsdp_ax, scatter_dimension=0, tiled=True)
+        y = jax.lax.psum(y, model_axes)          # combine expert partials
+        aux = _aux_loss(probs, ids, m.num_experts)
+        if baxes[:-1]:
+            aux = jax.lax.pmean(aux, baxes[:-1])
+        return y, aux
+
+    out, aux = jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(bspec, None, None), P(None, None),
+                  P(mspec, None, fsdp_ax), P(mspec, None, fsdp_ax),
+                  P(mspec, fsdp_ax, None)),
+        out_specs=(P(bspec, None, None), P()),
+        check_vma=False,
+    )(x, params["router"], params["w_gate"], params["w_up"], params["w_down"])
+    return out, aux
+
+
+def _apply_moe_ep(params, x, cfg: ModelConfig, ep: int):
+    """Expert-parallel path: shard_map over the model axes."""
+    m = cfg.moe
+    ctx = dist.get_ctx()
+    mesh = ctx.mesh
+    B, S, d = x.shape
+    e_local = m.num_experts // ep
+    bspec = dist.batch_spec_entry()
+    mspec = dist.model_spec_entry()
+    model_axes = tuple(ctx.model_axes)
+    # tokens per shard (batch may be replicated when bspec is None)
+    T_local = (B // ctx.axis_size(ctx.batch_axes)) * S
+    cap = _capacity(T_local, m.top_k, m.num_experts, m.capacity_factor)
+
+    def shard_fn(x_blk, router_w, w_gate, w_up, w_down):
+        b, s, _ = x_blk.shape
+        x_flat = x_blk.reshape(b * s, d)
+        ids, gates, probs = _route(router_w, x_flat, m.num_experts, m.top_k)
+        # translate to local expert ids; foreign experts -> -1 (dropped here,
+        # computed by the shard that owns them)
+        r = 0
+        for ax in model_axes:
+            r = r * mesh.shape[ax] + jax.lax.axis_index(ax)
+        offset = r * e_local
+        local = ids - offset
+        local = jnp.where((local >= 0) & (local < e_local), local, -1)
+        y = _dispatch_compute_combine(
+            x_flat, local, gates, w_gate, w_up, w_down, e_local, cap, cfg.act)
+        y = jax.lax.psum(y, model_axes)      # combine expert partials
+        aux = _aux_loss(probs, ids, m.num_experts)
+        if ctx.batch_axes:
+            aux = jax.lax.pmean(aux, tuple(ctx.batch_axes))
+        return y.reshape(b, s, d), aux
+
+    out, aux = jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(bspec, None, None), P(None, None),
+                  P(mspec, None, None), P(mspec, None, None),
+                  P(mspec, None, None)),
+        out_specs=(P(bspec, None, None), P()),
+        check_vma=False,
+    )(x, params["router"], params["w_gate"], params["w_up"], params["w_down"])
+    return out, aux

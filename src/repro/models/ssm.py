@@ -1,0 +1,243 @@
+"""State-space / linear-recurrence blocks: RWKV-6 ("Finch") and Mamba2.
+
+Both provide a sequence form (``lax.scan`` over time — used for train and
+prefill) and a single-step recurrent form (used for decode). Decode state is
+O(1) in sequence length, which is what makes the ``long_500k`` shape native
+for these families.
+
+RWKV-6 (arXiv:2404.05892), per layer
+  time-mix: token-shift mixed r/k/v/w/g projections; data-dependent decay
+      w_t = exp(-exp(w0 + tanh(x_w A) B))      (the Finch hallmark)
+  wkv recurrence per head (hs = head size):
+      y_t = r_t · (S_{t-1} + diag(u) k_t v_t^T)
+      S_t = diag(w_t) S_{t-1} + k_t v_t^T
+  channel-mix: token-shift + squared-ReLU MLP with sigmoid receptance gate.
+
+Mamba2 (SSD, simplified: ngroups=1, conv over x only), per layer
+      dt_t = softplus(raw_dt + dt_bias)          (B, T, H)
+      a_t  = exp(-exp(A_log) * dt_t)
+      h_t  = a_t h_{t-1} + (dt_t x_t) ⊗ B_t      h: (B, H, hd, N)
+      y_t  = h_t · C_t + D x_t
+  with gated RMSNorm and output projection.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import dense_init, rms_norm, stacked_dense_init
+
+# ---------------------------------------------------------------------------
+# RWKV-6
+# ---------------------------------------------------------------------------
+
+
+def init_rwkv(key, cfg: ModelConfig, stacked: int = 0):
+    d, f = cfg.d_model, cfg.d_ff
+    rank = cfg.ssm.decay_lora_rank
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 12)
+    pre = (stacked,) if stacked else ()
+
+    def mk(k, i, o, scale=None):
+        if stacked:
+            return stacked_dense_init(k, stacked, i, o, dtype, scale)
+        return dense_init(k, i, o, dtype, scale)
+
+    def vec(k, shape, init=0.0, noise=0.0):
+        base = jnp.full(pre + shape, init, jnp.float32)
+        if noise:
+            base = base + noise * jax.random.normal(k, pre + shape, jnp.float32)
+        return base.astype(dtype)
+
+    return {
+        # time-mix
+        "mu": vec(ks[0], (5, d), 0.5, 0.1),   # mixing for r,k,v,w,g
+        "w_r": mk(ks[1], d, d),
+        "w_k": mk(ks[2], d, d),
+        "w_v": mk(ks[3], d, d),
+        "w_g": mk(ks[4], d, d),
+        "w_o": mk(ks[5], d, d),
+        "w0": vec(ks[6], (d,), -6.0, 0.3),    # base decay (large negative -> w≈1)
+        "lora_a": mk(ks[7], d, rank, scale=0.01),
+        "lora_b": mk(ks[8], rank, d, scale=0.01),
+        "u": vec(ks[9], (d,), 0.0, 0.3),      # per-channel bonus
+        "ln_x": jnp.ones(pre + (d,), dtype),  # per-head output norm
+        # channel-mix
+        "mu_c": vec(ks[10], (2, d), 0.5, 0.1),
+        "w_ck": mk(ks[11], d, f),
+        "w_cv": mk(jax.random.fold_in(key, 101), f, d),
+        "w_cr": mk(jax.random.fold_in(key, 102), d, d),
+    }
+
+
+def _rwkv_decay(p, xw):
+    """Data-dependent per-channel decay in (0, 1). xw: (..., d)."""
+    lora = jnp.einsum("...d,dr->...r", xw.astype(jnp.float32),
+                      p["lora_a"].astype(jnp.float32))
+    lora = jnp.einsum("...r,rd->...d", jnp.tanh(lora),
+                      p["lora_b"].astype(jnp.float32))
+    return jnp.exp(-jnp.exp(p["w0"].astype(jnp.float32) + lora))
+
+
+def _rwkv_mix(x, x_prev, mu):
+    """Token-shift interpolation: x + (x_prev - x) * mu."""
+    return x + (x_prev - x) * mu.astype(x.dtype)
+
+
+def rwkv_time_mix_seq(p, x, x_last, state, cfg: ModelConfig):
+    """Sequence form. x: (B, T, d); x_last: (B, d) previous token's input
+    (from cache, zeros at start); state: (B, H, hs, hs) f32.
+    Returns (out, new_x_last, new_state)."""
+    B, T, d = x.shape
+    hs = cfg.ssm.rwkv_head_size
+    H = d // hs
+    x_prev = jnp.concatenate([x_last[:, None], x[:, :-1]], axis=1)
+    mu = p["mu"]
+    xr = _rwkv_mix(x, x_prev, mu[0])
+    xk = _rwkv_mix(x, x_prev, mu[1])
+    xv = _rwkv_mix(x, x_prev, mu[2])
+    xw = _rwkv_mix(x, x_prev, mu[3])
+    xg = _rwkv_mix(x, x_prev, mu[4])
+
+    def proj(w, inp):
+        return jnp.einsum("btd,de->bte", inp, w,
+                          preferred_element_type=jnp.float32)
+
+    r = proj(p["w_r"], xr).reshape(B, T, H, hs)
+    k = proj(p["w_k"], xk).reshape(B, T, H, hs)
+    v = proj(p["w_v"], xv).reshape(B, T, H, hs)
+    g = jax.nn.silu(proj(p["w_g"], xg))
+    w = _rwkv_decay(p, xw).reshape(B, T, H, hs)
+    u = p["u"].astype(jnp.float32).reshape(H, hs)
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp              # (B, H, hs) each, f32
+        kv = k_t[..., :, None] * v_t[..., None, :]          # (B,H,hs,hs)
+        y = jnp.einsum("bhi,bhij->bhj", r_t, S + u[..., :, None] * kv)
+        S = w_t[..., :, None] * S + kv
+        return S, y
+
+    rs, ks_, vs, ws = (a.transpose(1, 0, 2, 3) for a in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state, (rs, ks_, vs, ws))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, T, H, hs)
+    # per-head group norm
+    y = rms_norm(y, jnp.ones((hs,), jnp.float32), cfg.rmsnorm_eps)
+    y = (y.reshape(B, T, d) * p["ln_x"].astype(jnp.float32))
+    y = (y * g.reshape(B, T, d)).astype(x.dtype)
+    out = jnp.einsum("btd,de->bte", y, p["w_o"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, x[:, -1], state
+
+
+def rwkv_channel_mix_seq(p, x, x_last):
+    """Channel-mix with token shift. Returns (out, new_x_last)."""
+    x_prev = jnp.concatenate([x_last[:, None], x[:, :-1]], axis=1)
+    xk = _rwkv_mix(x, x_prev, p["mu_c"][0])
+    xr = _rwkv_mix(x, x_prev, p["mu_c"][1])
+    k = jnp.square(jax.nn.relu(
+        jnp.einsum("btd,df->btf", xk, p["w_ck"],
+                   preferred_element_type=jnp.float32)))
+    kv = jnp.einsum("btf,fd->btd", k.astype(x.dtype), p["w_cv"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    r = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, p["w_cr"],
+                                  preferred_element_type=jnp.float32))
+    return (r.astype(x.dtype) * kv), x[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# Mamba2
+# ---------------------------------------------------------------------------
+
+
+def mamba_dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    """(inner, nheads, headdim, state)."""
+    inner = cfg.ssm.expand * cfg.d_model
+    headdim = cfg.resolved_head_dim
+    return inner, inner // headdim, headdim, cfg.ssm.state_size
+
+
+def init_mamba(key, cfg: ModelConfig, stacked: int = 0):
+    d = cfg.d_model
+    inner, nheads, headdim, N = mamba_dims(cfg)
+    conv = cfg.ssm.conv_size
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    pre = (stacked,) if stacked else ()
+    proj_out = 2 * inner + 2 * N + nheads
+
+    def mk(k, i, o):
+        if stacked:
+            return stacked_dense_init(k, stacked, i, o, dtype)
+        return dense_init(k, i, o, dtype)
+
+    return {
+        "in_proj": mk(ks[0], d, proj_out),
+        "conv_w": (jax.random.normal(ks[1], pre + (conv, inner), jnp.float32)
+                   / math.sqrt(conv)).astype(dtype),
+        "A_log": jnp.zeros(pre + (nheads,), jnp.float32),
+        "D": jnp.ones(pre + (nheads,), jnp.float32),
+        "dt_bias": jnp.zeros(pre + (nheads,), jnp.float32),
+        "norm_w": jnp.ones(pre + (inner,), dtype),
+        "out_proj": mk(ks[4], inner, d),
+    }
+
+
+def _mamba_split(p, x, cfg: ModelConfig):
+    inner, nheads, headdim, N = mamba_dims(cfg)
+    zxbcdt = jnp.einsum("btd,de->bte", x, p["in_proj"],
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+    z = zxbcdt[..., :inner]
+    xc = zxbcdt[..., inner:2 * inner]
+    Bc = zxbcdt[..., 2 * inner:2 * inner + N]
+    Cc = zxbcdt[..., 2 * inner + N:2 * inner + 2 * N]
+    dt = zxbcdt[..., 2 * inner + 2 * N:]
+    return z, xc, Bc, Cc, dt
+
+
+def _causal_conv_seq(xc, conv_w, conv_state):
+    """Depthwise causal conv along T. xc: (B,T,inner); conv_state: (B, K-1,
+    inner) carry-in from previous tokens. Returns (y, new_conv_state)."""
+    K = conv_w.shape[0]
+    xfull = jnp.concatenate([conv_state.astype(xc.dtype), xc], axis=1)
+    segs = [xfull[:, i:i + xc.shape[1]] * conv_w[i].astype(xc.dtype)
+            for i in range(K)]
+    y = sum(segs)
+    return jax.nn.silu(y.astype(jnp.float32)).astype(xc.dtype), xfull[:, -(K - 1):]
+
+
+def mamba_seq(p, x, conv_state, ssm_state, cfg: ModelConfig):
+    """Sequence form. x: (B,T,d); conv_state: (B,K-1,inner);
+    ssm_state: (B,H,hd,N) f32. Returns (out, conv_state, ssm_state)."""
+    B, T, d = x.shape
+    inner, nheads, headdim, N = mamba_dims(cfg)
+    z, xc, Bc, Cc, dt = _mamba_split(p, x, cfg)
+    xc, conv_state = _causal_conv_seq(xc, p["conv_w"], conv_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])     # (B,T,H)
+    a = jnp.exp(-jnp.exp(p["A_log"]) * dt)                          # (B,T,H)
+    xh = xc.reshape(B, T, nheads, headdim).astype(jnp.float32)
+    Bf = Bc.astype(jnp.float32)
+    Cf = Cc.astype(jnp.float32)
+
+    def step(h, inp):
+        a_t, dx_t, B_t, C_t = inp   # (B,H), (B,H,hd), (B,N), (B,N)
+        h = a_t[..., None, None] * h + dx_t[..., None] * B_t[:, None, None, :]
+        y = jnp.einsum("bhdn,bn->bhd", h, C_t)
+        return h, y
+
+    dx = dt[..., None] * xh                                          # (B,T,H,hd)
+    ins = (a.transpose(1, 0, 2), dx.transpose(1, 0, 2, 3),
+           Bf.transpose(1, 0, 2), Cf.transpose(1, 0, 2))
+    ssm_state, ys = jax.lax.scan(step, ssm_state, ins)
+    y = ys.transpose(1, 0, 2, 3)                                     # (B,T,H,hd)
+    y = y + p["D"][None, None, :, None] * xh
+    y = y.reshape(B, T, inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y, p["norm_w"], cfg.rmsnorm_eps).astype(x.dtype)
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, conv_state, ssm_state

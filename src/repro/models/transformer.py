@@ -1,0 +1,433 @@
+"""Decoder stacks for every assigned family, with scan-over-layers.
+
+All stacks share a uniform calling convention:
+
+    apply_<family>_stack(params, x, positions, cfg, cache, mode) -> (y, cache, aux)
+
+* ``mode``: "train" | "prefill" | "decode".
+* ``cache`` is a dict pytree (see :func:`init_cache`); ``None`` in train mode.
+* layer parameters are stacked along a leading L axis and consumed via
+  ``lax.scan`` so HLO size (and compile time) is depth-independent.
+
+KV caches support ring-buffer (sliding window) semantics: slot = pos % S_c.
+SSM caches carry O(1) recurrent state; RWKV additionally carries the
+token-shift inputs.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import dist
+from repro.models.attention import (attention_block, cross_attention_block,
+                                    init_attention, project_enc_kv)
+from repro.models.layers import (apply_mlp, init_mlp, layer_norm, rms_norm)
+from repro.models.moe import apply_moe, init_moe
+from repro.models.ssm import (init_mamba, init_rwkv, mamba_dims, mamba_seq,
+                              rwkv_channel_mix_seq, rwkv_time_mix_seq)
+
+# ---------------------------------------------------------------------------
+# Cache
+# ---------------------------------------------------------------------------
+
+
+def cache_len_for(cfg: ModelConfig, seq_len: int, window: Optional[int] = None) -> int:
+    w = cfg.sliding_window if window is None else window
+    return min(seq_len, w) if w else seq_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
+               window: Optional[int] = None, dtype=None):
+    """Build the decode/prefill cache pytree for ``cfg``.
+
+    ``seq_len`` is the maximum context length; sliding-window archs allocate
+    only ``window`` slots (ring buffer).
+    """
+    dtype = jnp.dtype(dtype or cfg.dtype)
+    hd = cfg.resolved_head_dim
+    nkv = cfg.num_kv_heads
+    d = cfg.d_model
+    L = cfg.num_layers
+    cache = {
+        "len": jnp.zeros((batch,), jnp.int32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        Sc = cache_len_for(cfg, seq_len, window)
+        cache["k"] = jnp.zeros((L, batch, Sc, nkv, hd), dtype)
+        cache["v"] = jnp.zeros((L, batch, Sc, nkv, hd), dtype)
+        if cfg.is_encdec:
+            Se = cfg.encoder.num_frames
+            cache["cross_k"] = jnp.zeros((L, batch, Se, nkv, hd), dtype)
+            cache["cross_v"] = jnp.zeros((L, batch, Se, nkv, hd), dtype)
+    elif cfg.family == "ssm":        # rwkv6
+        hs = cfg.ssm.rwkv_head_size
+        H = d // hs
+        cache["ssm"] = jnp.zeros((L, batch, H, hs, hs), jnp.float32)
+        cache["x_last_t"] = jnp.zeros((L, batch, d), dtype)
+        cache["x_last_c"] = jnp.zeros((L, batch, d), dtype)
+    elif cfg.family == "hybrid":     # zamba2: mamba states + shared-attn kv
+        inner, nheads, headdim, N = mamba_dims(cfg)
+        K = cfg.ssm.conv_size
+        G = -(-L // cfg.hybrid.attn_every)   # number of shared-attn sites
+        Sc = cache_len_for(cfg, seq_len, window or cfg.sliding_window or 4096)
+        cache["ssm"] = jnp.zeros((L, batch, nheads, headdim, N), jnp.float32)
+        cache["conv"] = jnp.zeros((L, batch, K - 1, inner), dtype)
+        cache["k"] = jnp.zeros((G, batch, Sc, nkv, hd), dtype)
+        cache["v"] = jnp.zeros((G, batch, Sc, nkv, hd), dtype)
+    else:
+        raise ValueError(cfg.family)
+    return cache
+
+
+def _write_kv(cache_k_l, cache_v_l, k, v, lens, mode: str):
+    """Write new K/V into one layer's cache. Handles ring buffers.
+
+    cache_k_l: (B, Sc, nkv, hd); k: (B, S_new, nkv, hd); lens: (B,) current
+    per-sequence lengths (write positions). Prefill assumes fresh sequences
+    (lens == 0 semantics; entries land at slots 0..S_new-1, ring-rotated).
+    """
+    Sc = cache_k_l.shape[1]
+    S_new = k.shape[1]
+    if mode == "decode":            # one token per row at slot lens[b] % Sc
+        slot = (lens % Sc).astype(jnp.int32)
+
+        def upd(c, x, s):
+            return jax.lax.dynamic_update_slice(c, x, (s, 0, 0))
+
+        ck = jax.vmap(upd)(cache_k_l, k, slot)
+        cv = jax.vmap(upd)(cache_v_l, v, slot)
+        return ck, cv
+    # prefill (fresh rows): keep the last Sc entries, rotated into ring order
+    if S_new >= Sc:
+        s0 = S_new % Sc
+        return jnp.roll(k[:, -Sc:], s0, axis=1), jnp.roll(v[:, -Sc:], s0, axis=1)
+    ck = jax.lax.dynamic_update_slice(cache_k_l, k, (0, 0, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache_v_l, v, (0, 0, 0, 0))
+    return ck, cv
+
+
+# ---------------------------------------------------------------------------
+# Dense / MoE / VLM decoder stack (also whisper decoder via cross_kv)
+# ---------------------------------------------------------------------------
+
+
+def init_dense_stack(key, cfg: ModelConfig):
+    L = cfg.num_layers
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    p = {
+        "ln1": jnp.ones((L, cfg.d_model), dtype),
+        "ln2": jnp.ones((L, cfg.d_model), dtype),
+        "attn": init_attention(ks[0], cfg, stacked=L),
+        "final_ln": jnp.ones((cfg.d_model,), dtype),
+    }
+    if cfg.moe is not None:
+        p["moe"] = init_moe(ks[1], cfg, stacked=L)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg, stacked=L)
+    if cfg.is_encdec:
+        p["ln_cross"] = jnp.ones((L, cfg.d_model), dtype)
+        p["cross"] = init_attention(ks[2], cfg, stacked=L, cross=True)
+    return p
+
+
+def apply_dense_stack(params, x, positions, cfg: ModelConfig, cache, mode: str,
+                      window: Optional[int] = None, remat: bool = False,
+                      enc_out=None):
+    """x: (B, S, d). Returns (y, cache, aux_loss).
+
+    For encoder-decoder models (whisper): pass ``enc_out`` in train/prefill
+    mode; prefill stores the projected cross-K/V into the cache for decode.
+    """
+    use_ln = cfg.family == "audio"   # whisper uses LayerNorm (bias-free here)
+    norm = (lambda h, w: layer_norm(h, w, jnp.zeros_like(w), cfg.rmsnorm_eps)) \
+        if use_ln else (lambda h, w: rms_norm(h, w, cfg.rmsnorm_eps))
+    win = cfg.sliding_window if window is None else window
+    kv_len = None if cache is None else (
+        cache["len"] + (1 if mode == "decode" else x.shape[1]))
+    lens0 = None if cache is None else cache["len"]
+    compute_cross = cfg.is_encdec and mode in ("train", "prefill")
+
+    def body(carry, xs):
+        x, aux = carry
+        lp = xs["layer"]
+        h = norm(x, lp["ln1"])
+        if mode == "train":
+            attn_out, k, v = attention_block(lp["attn"], h, cfg, positions,
+                                             mode="train", window=win)
+            ck = cv = None
+        else:
+            ck_in, cv_in = xs["ck"], xs["cv"]
+            if mode == "decode":
+                # write first so the current token attends to itself
+                _, k, v = attention_block(lp["attn"], h, cfg, positions,
+                                          mode="train", window=win)  # project only
+                ck, cv = _write_kv(ck_in, cv_in, k, v, lens0, "decode")
+                attn_out, _, _ = attention_block(
+                    lp["attn"], h, cfg, positions, cache_k=ck, cache_v=cv,
+                    kv_len=kv_len, mode="decode", window=win)
+            else:  # prefill
+                attn_out, k, v = attention_block(lp["attn"], h, cfg, positions,
+                                                 mode="train", window=win)
+                ck, cv = _write_kv(ck_in, cv_in, k, v, lens0, "prefill")
+        x = x + attn_out
+        if cfg.is_encdec:
+            if compute_cross:
+                cross_kv = project_enc_kv(lp["cross"], enc_out, cfg)
+            else:
+                cross_kv = (xs["cross_k"], xs["cross_v"])
+            hc = norm(x, lp["ln_cross"])
+            x = x + cross_attention_block(lp["cross"], hc, cross_kv, cfg)
+            if compute_cross and cache is not None:
+                ys_cross = cross_kv
+            else:
+                ys_cross = None
+        h2 = norm(x, lp["ln2"])
+        if cfg.moe is not None:
+            ff, l_aux = apply_moe(lp["moe"], h2, cfg, train=(mode == "train"))
+            aux = aux + l_aux
+        else:
+            ff = apply_mlp(lp["mlp"], h2, cfg.act)
+        x = x + ff
+        x = dist.constrain(x, dist.batch_spec_entry(), None, None)
+        ys = {}
+        if ck is not None:
+            ys["ck"], ys["cv"] = ck, cv
+        if cfg.is_encdec and compute_cross and cache is not None:
+            ys["cross_k"], ys["cross_v"] = ys_cross
+        return (x, aux), ys
+
+    if remat and mode == "train":
+        body = jax.checkpoint(body)
+
+    layer_tree = {k: v for k, v in params.items()
+                  if k != "final_ln"}
+    xs = {"layer": layer_tree}
+    if cache is not None:
+        xs["ck"], xs["cv"] = cache["k"], cache["v"]
+        if cfg.is_encdec and not compute_cross:
+            xs["cross_k"], xs["cross_v"] = cache["cross_k"], cache["cross_v"]
+
+    (x, aux), ys = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+    if cache is not None and mode != "train" and "ck" in ys:
+        cache = dict(cache)
+        cache["k"], cache["v"] = ys["ck"], ys["cv"]
+        if "cross_k" in ys:
+            cache["cross_k"], cache["cross_v"] = ys["cross_k"], ys["cross_v"]
+        S_new = 1 if mode == "decode" else positions.shape[-1]
+        cache["len"] = cache["len"] + S_new
+        cache["pos"] = cache["pos"] + S_new
+    x = norm(x, params["final_ln"])
+    return x, cache, aux
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 stack
+# ---------------------------------------------------------------------------
+
+
+def init_rwkv_stack(key, cfg: ModelConfig):
+    L = cfg.num_layers
+    dtype = jnp.dtype(cfg.dtype)
+    return {
+        "ln1": jnp.ones((L, cfg.d_model), dtype),
+        "ln2": jnp.ones((L, cfg.d_model), dtype),
+        "layers": init_rwkv(key, cfg, stacked=L),
+        "final_ln": jnp.ones((cfg.d_model,), dtype),
+    }
+
+
+def apply_rwkv_stack(params, x, positions, cfg: ModelConfig, cache, mode: str,
+                     window=None, remat: bool = False):
+    B = x.shape[0]
+    hs = cfg.ssm.rwkv_head_size
+    H = cfg.d_model // hs
+    if cache is None:
+        zstate = jnp.zeros((cfg.num_layers, B, H, hs, hs), jnp.float32)
+        zlast = jnp.zeros((cfg.num_layers, B, cfg.d_model), x.dtype)
+        ssm, xlt, xlc = zstate, zlast, zlast
+    else:
+        ssm, xlt, xlc = cache["ssm"], cache["x_last_t"], cache["x_last_c"]
+
+    def body(carry, xs):
+        x = carry
+        lp, st, lt, lc = xs["lp"], xs["ssm"], xs["xlt"], xs["xlc"]
+        h = rms_norm(x, xs["ln1"], cfg.rmsnorm_eps)
+        tm, new_lt, new_st = rwkv_time_mix_seq(lp, h, lt, st, cfg)
+        x = x + tm
+        h2 = rms_norm(x, xs["ln2"], cfg.rmsnorm_eps)
+        cm, new_lc = rwkv_channel_mix_seq(lp, h2, lc)
+        x = x + cm
+        x = dist.constrain(x, dist.batch_spec_entry(), None, None)
+        return x, {"ssm": new_st, "xlt": new_lt, "xlc": new_lc}
+
+    if remat and mode == "train":
+        body = jax.checkpoint(body)
+    xs = {"lp": params["layers"], "ssm": ssm, "xlt": xlt, "xlc": xlc,
+          "ln1": params["ln1"], "ln2": params["ln2"]}
+    x, ys = jax.lax.scan(body, x, xs)
+    if cache is not None:
+        cache = dict(cache)
+        cache["ssm"], cache["x_last_t"], cache["x_last_c"] = (
+            ys["ssm"], ys["xlt"], ys["xlc"])
+        S_new = x.shape[1]
+        cache["len"] = cache["len"] + S_new
+        cache["pos"] = cache["pos"] + S_new
+    x = rms_norm(x, params["final_ln"], cfg.rmsnorm_eps)
+    return x, cache, jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 hybrid stack: groups of mamba layers + shared attention block
+# ---------------------------------------------------------------------------
+
+
+def init_zamba_stack(key, cfg: ModelConfig):
+    L = cfg.num_layers
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "ln_m": jnp.ones((L, cfg.d_model), dtype),
+        "mamba": init_mamba(ks[0], cfg, stacked=L),
+        "shared_ln1": jnp.ones((cfg.d_model,), dtype),
+        "shared_ln2": jnp.ones((cfg.d_model,), dtype),
+        "shared_attn": init_attention(ks[1], cfg),
+        "shared_mlp": init_mlp(ks[2], cfg),
+        "final_ln": jnp.ones((cfg.d_model,), dtype),
+    }
+
+
+def apply_zamba_stack(params, x, positions, cfg: ModelConfig, cache, mode: str,
+                      window: Optional[int] = None, remat: bool = False):
+    L = cfg.num_layers
+    every = cfg.hybrid.attn_every
+    win = window if window is not None else (cfg.sliding_window or 4096)
+    B = x.shape[0]
+    inner, nheads, headdim, N = mamba_dims(cfg)
+    K = cfg.ssm.conv_size
+    if cache is None:
+        conv = jnp.zeros((L, B, K - 1, inner), x.dtype)
+        ssm = jnp.zeros((L, B, nheads, headdim, N), jnp.float32)
+        kv_len = None
+        lens0 = jnp.zeros((B,), jnp.int32)
+    else:
+        conv, ssm = cache["conv"], cache["ssm"]
+        lens0 = cache["len"]
+        kv_len = cache["len"] + (1 if mode == "decode" else x.shape[1])
+    aux = jnp.zeros((), jnp.float32)
+    new_conv, new_ssm = [], []
+    new_k, new_v = [], []
+
+    def mamba_group(x, lo, hi):
+        lp = jax.tree_util.tree_map(lambda a: a[lo:hi], params["mamba"])
+        lns = params["ln_m"][lo:hi]
+        cv = conv[lo:hi]
+        st = ssm[lo:hi]
+
+        def body(x, xs):
+            h = rms_norm(x, xs["ln"], cfg.rmsnorm_eps)
+            out, c2, s2 = mamba_seq(xs["lp"], h, xs["conv"], xs["ssm"], cfg)
+            x = x + out
+            x = dist.constrain(x, dist.batch_spec_entry(), None, None)
+            return x, {"conv": c2, "ssm": s2}
+
+        if remat and mode == "train":
+            body = jax.checkpoint(body)
+        x, ys = jax.lax.scan(body, x, {"lp": lp, "ln": lns, "conv": cv, "ssm": st})
+        return x, ys["conv"], ys["ssm"]
+
+    g = 0
+    lo = 0
+    while lo < L:
+        hi = min(lo + every, L)
+        # shared attention block at each group boundary
+        h = rms_norm(x, params["shared_ln1"], cfg.rmsnorm_eps)
+        if mode == "train":
+            attn_out, k, v = attention_block(params["shared_attn"], h, cfg,
+                                             positions, mode="train", window=win)
+        else:
+            ck_in, cv_in = cache["k"][g], cache["v"][g]
+            if mode == "decode":
+                _, k, v = attention_block(params["shared_attn"], h, cfg,
+                                          positions, mode="train", window=win)
+                ck, cvv = _write_kv(ck_in, cv_in, k, v, lens0, "decode")
+                attn_out, _, _ = attention_block(
+                    params["shared_attn"], h, cfg, positions, cache_k=ck,
+                    cache_v=cvv, kv_len=kv_len, mode="decode", window=win)
+            else:
+                attn_out, k, v = attention_block(params["shared_attn"], h, cfg,
+                                                 positions, mode="train",
+                                                 window=win)
+                ck, cvv = _write_kv(ck_in, cv_in, k, v, lens0, "prefill")
+            new_k.append(ck)
+            new_v.append(cvv)
+        x = x + attn_out
+        h2 = rms_norm(x, params["shared_ln2"], cfg.rmsnorm_eps)
+        x = x + apply_mlp(params["shared_mlp"], h2, cfg.act)
+        # mamba group
+        x, c2, s2 = mamba_group(x, lo, hi)
+        new_conv.append(c2)
+        new_ssm.append(s2)
+        lo = hi
+        g += 1
+
+    if cache is not None:
+        cache = dict(cache)
+        cache["conv"] = jnp.concatenate(new_conv, axis=0)
+        cache["ssm"] = jnp.concatenate(new_ssm, axis=0)
+        cache["k"] = jnp.stack(new_k, axis=0)
+        cache["v"] = jnp.stack(new_v, axis=0)
+        S_new = 1 if mode == "decode" else x.shape[1]
+        cache["len"] = cache["len"] + S_new
+        cache["pos"] = cache["pos"] + S_new
+    x = rms_norm(x, params["final_ln"], cfg.rmsnorm_eps)
+    return x, cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Whisper encoder
+# ---------------------------------------------------------------------------
+
+
+def init_encoder(key, cfg: ModelConfig):
+    Le = cfg.encoder.num_layers
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    return {
+        "pos": (0.02 * jax.random.normal(
+            ks[0], (cfg.encoder.num_frames, cfg.d_model), jnp.float32)).astype(dtype),
+        "ln1": jnp.ones((Le, cfg.d_model), dtype),
+        "ln2": jnp.ones((Le, cfg.d_model), dtype),
+        "attn": init_attention(ks[1], cfg, stacked=Le),
+        "mlp": init_mlp(ks[2], cfg, stacked=Le),
+        "final_ln": jnp.ones((cfg.d_model,), dtype),
+    }
+
+
+def apply_encoder(params, frames, cfg: ModelConfig):
+    """frames: (B, S_enc, d) precomputed stub embeddings."""
+    from repro.models.attention import attend_full, _project_qkv, _expand_gqa
+    x = frames + params["pos"][None, :frames.shape[1]].astype(frames.dtype)
+    zeros = jnp.zeros_like
+
+    def body(x, lp):
+        h = layer_norm(x, lp["ln1"], zeros(lp["ln1"]), cfg.rmsnorm_eps)
+        q, k, v = _project_qkv(lp["attn"], h, h, cfg,
+                               jnp.arange(x.shape[1])[None], rope=False)
+        qg = _expand_gqa(q, cfg.num_kv_heads)
+        out = attend_full(qg, k, v, causal=False, window=0)
+        out = out.reshape(x.shape[0], x.shape[1], -1)
+        out = jnp.einsum("bsh,hd->bsd", out, lp["attn"]["w_o"],
+                         preferred_element_type=jnp.float32).astype(x.dtype)
+        x = x + out
+        h2 = layer_norm(x, lp["ln2"], zeros(lp["ln2"]), cfg.rmsnorm_eps)
+        x = x + apply_mlp(lp["mlp"], h2, cfg.act)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, {k: params[k] for k in ("ln1", "ln2", "attn", "mlp")})
+    return layer_norm(x, params["final_ln"], zeros(params["final_ln"]),
+                      cfg.rmsnorm_eps)

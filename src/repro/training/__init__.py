@@ -1,0 +1,3 @@
+"""Training substrate: optimizer, data pipeline, train loop, checkpointing."""
+from repro.training.optimizer import AdamWState, adamw_init, adamw_update, lr_schedule  # noqa: F401
+from repro.training.train_loop import Trainer, make_train_step, loss_fn  # noqa: F401

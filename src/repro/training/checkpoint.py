@@ -1,0 +1,53 @@
+"""Checkpointing: pytree <-> .npz with key-path flattening, step resume."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, params, opt_state=None, step: int = 0,
+                    metadata: dict | None = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    np.savez(os.path.join(path, "params.npz"), **_flatten(params))
+    if opt_state is not None:
+        np.savez(os.path.join(path, "opt.npz"), **_flatten(opt_state))
+    meta = {"step": step, **(metadata or {})}
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump(meta, f)
+
+
+def restore_checkpoint(path: str, params_template, opt_template=None
+                       ) -> Tuple[Any, Any, int]:
+    """Restore into the template's pytree structure/dtypes."""
+    data = np.load(os.path.join(path, "params.npz"))
+
+    def rebuild(template, npz) -> Any:
+        flat_t, treedef = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        for pth, leaf in flat_t:
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in pth)
+            arr = npz[key]
+            assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+            leaves.append(jnp.asarray(arr, leaf.dtype))
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    params = rebuild(params_template, data)
+    opt_state = None
+    if opt_template is not None and os.path.exists(os.path.join(path, "opt.npz")):
+        opt_state = rebuild(opt_template, np.load(os.path.join(path, "opt.npz")))
+    with open(os.path.join(path, "meta.json")) as f:
+        step = json.load(f)["step"]
+    return params, opt_state, step

@@ -1,0 +1,13 @@
+import os
+
+# Smoke tests and benches must see ONE device (the dry-run sets its own
+# XLA_FLAGS in a separate process). Keep CPU determinism.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,89 @@
+"""Config system: all assigned architectures register with the exact specs."""
+import pytest
+
+from repro.config import (ARCH_IDS, SHAPES, all_archs, get_arch, get_shape,
+                          model_for_shape)
+
+EXPECTED = {
+    "llama4-maverick-400b-a17b": dict(num_layers=48, d_model=5120, num_heads=40,
+                                      num_kv_heads=8, d_ff=8192,
+                                      vocab_size=202048),
+    "rwkv6-3b": dict(num_layers=32, d_model=2560, d_ff=8960, vocab_size=65536),
+    "qwen3-8b": dict(num_layers=36, d_model=4096, num_heads=32,
+                     num_kv_heads=8, d_ff=12288, vocab_size=151936),
+    "internvl2-2b": dict(num_layers=24, d_model=2048, num_heads=16,
+                         num_kv_heads=8, d_ff=8192, vocab_size=92553),
+    "starcoder2-7b": dict(num_layers=32, d_model=4608, num_heads=36,
+                          num_kv_heads=4, d_ff=18432, vocab_size=49152),
+    "zamba2-1.2b": dict(num_layers=38, d_model=2048, num_heads=32,
+                        num_kv_heads=32, d_ff=8192, vocab_size=32000),
+    "granite-moe-1b-a400m": dict(num_layers=24, d_model=1024, num_heads=16,
+                                 num_kv_heads=8, d_ff=512, vocab_size=49155),
+    "whisper-base": dict(num_layers=6, d_model=512, num_heads=8,
+                         num_kv_heads=8, d_ff=2048, vocab_size=51865),
+    "tinyllama-1.1b": dict(num_layers=22, d_model=2048, num_heads=32,
+                           num_kv_heads=4, d_ff=5632, vocab_size=32000),
+    "smollm-360m": dict(num_layers=32, d_model=960, num_heads=15,
+                        num_kv_heads=5, d_ff=2560, vocab_size=49152),
+}
+
+
+def test_all_archs_registered():
+    archs = all_archs()
+    assert set(archs) == set(ARCH_IDS)
+    assert len(archs) == 10
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_exact_specs(arch):
+    cfg = get_arch(arch)
+    for k, v in EXPECTED[arch].items():
+        assert getattr(cfg, k) == v, (arch, k)
+    assert cfg.source, "every config must cite its source"
+
+
+def test_arch_family_coverage():
+    fams = {get_arch(a).family for a in ARCH_IDS}
+    assert fams == {"dense", "moe", "ssm", "hybrid", "vlm", "audio"}
+
+
+def test_moe_specs():
+    l4 = get_arch("llama4-maverick-400b-a17b").moe
+    assert (l4.num_experts, l4.top_k) == (128, 1)
+    gr = get_arch("granite-moe-1b-a400m").moe
+    assert (gr.num_experts, gr.top_k) == (32, 8)
+
+
+def test_active_params_match_names():
+    l4 = get_arch("llama4-maverick-400b-a17b")
+    assert 12e9 < l4.active_param_count() < 25e9     # "A17B"
+    gr = get_arch("granite-moe-1b-a400m")
+    assert gr.active_param_count() < gr.param_count()
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_invariants(arch):
+    r = get_arch(arch).reduced()
+    assert r.num_layers <= 2
+    assert r.d_model <= 512
+    if r.moe:
+        assert r.moe.num_experts <= 4
+    assert r.family == get_arch(arch).family
+
+
+def test_shapes_exact():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32768
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].global_batch == 1
+
+
+def test_window_override_for_long_decode():
+    qwen = get_arch("qwen3-8b")
+    long = get_shape("long_500k")
+    assert model_for_shape(qwen, long).sliding_window == 8192
+    rwkv = get_arch("rwkv6-3b")
+    assert model_for_shape(rwkv, long).sliding_window == 0  # attention-free

@@ -1,0 +1,223 @@
+"""Beyond-paper extensions: Gumbel decision-plane algorithm, online hot-size
+controller (paper future-work (i)), paged KV cache."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import SamplingConfig
+from repro.core.autotune import HotSizeController, fit_zipf_s, zipf_alpha_curve
+from repro.core.decision_plane import DecisionPlane
+from repro.core.sampling import SamplingParams, masked_probs_reference
+
+
+class TestGumbelAlgorithm:
+    def test_distribution_exact_no_filter(self):
+        rng = np.random.default_rng(0)
+        B, V = 2, 64
+        z = jnp.asarray(rng.normal(0, 2, (B, V)).astype(np.float32))
+        dp = DecisionPlane(V, algorithm="gumbel", k_cap=32, seed=0)
+        params = SamplingParams.broadcast(B, SamplingConfig(temperature=0.9))
+        target = np.asarray(masked_probs_reference(z, params))
+        N = 5000
+        state = dp.init_state(B)
+        stepped = jax.jit(dp.step)
+        toks = np.stack([np.asarray(stepped(z, state, params, s)[0])
+                         for s in range(N)])
+        for b in range(B):
+            emp = np.bincount(toks[:, b], minlength=V) / N
+            tvd = 0.5 * np.abs(emp - target[b]).sum()
+            assert tvd < 0.05, tvd
+
+    def test_filters_fall_back_to_truncation(self):
+        rng = np.random.default_rng(1)
+        B, V = 8, 64
+        z = jnp.asarray(rng.normal(0, 3, (B, V)).astype(np.float32))
+        dp = DecisionPlane(V, algorithm="gumbel", k_cap=32, seed=0)
+        params = SamplingParams.broadcast(B, SamplingConfig(temperature=0.8,
+                                                            top_k=5))
+        from repro.core.sampling import filter_mask_reference
+        mask = np.asarray(filter_mask_reference(z / 0.8, params))
+        state = dp.init_state(B)
+        for step in range(20):
+            t, state, _ = dp.step(z, state, params, step)
+            assert mask[np.arange(B), np.asarray(t)].all()
+
+    def test_greedy(self):
+        z = jnp.asarray(np.random.default_rng(2).normal(0, 3, (4, 32)),
+                        jnp.float32)
+        dp = DecisionPlane(32, algorithm="gumbel", k_cap=16)
+        params = SamplingParams.broadcast(4, SamplingConfig(temperature=0.0))
+        t, _, _ = dp.step(z, dp.init_state(4), params, 0)
+        np.testing.assert_array_equal(np.asarray(t),
+                                      np.asarray(jnp.argmax(z, -1)))
+
+
+class TestHotSizeController:
+    def test_zipf_fit_roundtrip(self):
+        V = 32768
+        for s_true in (1.1, 1.4, 2.0):
+            H = 2048
+            alpha = zipf_alpha_curve(V, s_true, np.asarray([H]))[0]
+            s_fit = fit_zipf_s(V, H, alpha)
+            assert abs(s_fit - s_true) < 0.02, (s_true, s_fit)
+
+    def test_controller_converges_to_hstar(self):
+        """Feed observations from a known Zipf workload: the controller's H
+        must settle near the offline sizing model's optimum."""
+        V, s_true = 32768, 1.15
+        ctl = HotSizeController(vocab_size=V, h_current=V // 2,
+                                adjust_every=4, hysteresis=0.1)
+        rng = np.random.default_rng(0)
+        for step in range(200):
+            alpha = zipf_alpha_curve(V, s_true, np.asarray([ctl.h_current]))[0]
+            ctl.observe(alpha + rng.normal(0, 0.01))
+        # offline optimum under the same constants
+        from repro.core.sizing import SizingModel
+        hs = np.unique(np.geomspace(256, V, 96).astype(np.int64))
+        model = SizingModel(c0=ctl.c0, c=ctl.c, vocab_size=V,
+                            alpha_hs=hs.astype(np.float64),
+                            alpha_vals=zipf_alpha_curve(V, s_true, hs))
+        h_star = model.optimal_h(lo=256)
+        assert abs(np.log2(ctl.h_current / h_star)) < 0.75, \
+            (ctl.h_current, h_star, ctl.history[-3:])
+
+    def test_domain_shift_reacts(self):
+        """ᾱ collapse (domain shift, paper §9) must drive H upward."""
+        V = 32768
+        ctl = HotSizeController(vocab_size=V, h_current=1024,
+                                adjust_every=2, hysteresis=0.05)
+        for _ in range(20):
+            ctl.observe(0.95)
+        h_good = ctl.h_current
+        for _ in range(60):
+            ctl.observe(0.30)      # hot set suddenly covers little mass
+        assert ctl.h_current > h_good
+
+
+class TestPagedCache:
+    def test_matches_contiguous_semantics(self):
+        """Write a token stream through the paged cache; the gathered view
+        must equal the contiguous cache contents at every valid position."""
+        from repro.config import get_arch
+        from repro.engine.paged_cache import (BlockAllocator, PagedCacheConfig,
+                                              init_paged_cache, paged_gather,
+                                              paged_write)
+        cfg = get_arch("smollm-360m").reduced()
+        B, T = 3, 10
+        pcfg = PagedCacheConfig(block_size=4, num_blocks=16,
+                                max_blocks_per_seq=4)
+        cache = init_paged_cache(cfg, B, pcfg, dtype=jnp.float32)
+        alloc = BlockAllocator(pcfg, B)
+        rng = np.random.default_rng(0)
+        L, kv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+        ref_k = np.zeros((L, B, T, kv, hd), np.float32)
+        lens = np.zeros((B,), np.int32)
+        for t in range(T):
+            active = np.asarray([True, t % 2 == 0, True])  # slot1 every other
+            k_new = rng.normal(0, 1, (L, B, 1, kv, hd)).astype(np.float32)
+            v_new = k_new + 1.0
+            for b in range(B):
+                if active[b]:
+                    alloc.ensure(b, int(lens[b]) + 1)
+            cache["block_table"] = jnp.asarray(alloc.table(B))
+            cache = paged_write(cache, (jnp.asarray(k_new), jnp.asarray(v_new)),
+                                jnp.asarray(lens), pcfg,
+                                active=jnp.asarray(active))
+            for b in range(B):
+                if active[b]:
+                    ref_k[:, b, lens[b]] = k_new[:, b, 0]
+                    lens[b] += 1
+        gk, gv, glens = paged_gather(cache, pcfg)
+        np.testing.assert_array_equal(np.asarray(glens), lens)
+        gk = np.asarray(gk)
+        for b in range(B):
+            np.testing.assert_allclose(gk[:, b, :lens[b]], ref_k[:, b, :lens[b]],
+                                       rtol=1e-6)
+
+    def test_allocator_reuses_freed_blocks(self):
+        from repro.engine.paged_cache import BlockAllocator, PagedCacheConfig
+        pcfg = PagedCacheConfig(block_size=4, num_blocks=4,
+                                max_blocks_per_seq=4)
+        alloc = BlockAllocator(pcfg, 2)
+        alloc.ensure(0, 16)         # all 4 blocks
+        with pytest.raises(RuntimeError):
+            alloc.ensure(1, 1)
+        alloc.release(0)
+        alloc.ensure(1, 8)          # succeeds after release
+        assert len(alloc.owned[1]) == 2
+
+    def test_attention_over_paged_view_matches(self):
+        """attend_decode over the paged gather == over a contiguous cache."""
+        from repro.config import get_arch
+        from repro.engine.paged_cache import (BlockAllocator, PagedCacheConfig,
+                                              init_paged_cache, paged_gather,
+                                              paged_write)
+        from repro.models.attention import attend_decode
+        cfg = get_arch("smollm-360m").reduced()
+        B, T = 2, 7
+        pcfg = PagedCacheConfig(block_size=4, num_blocks=8,
+                                max_blocks_per_seq=3)
+        cache = init_paged_cache(cfg, B, pcfg, dtype=jnp.float32)
+        alloc = BlockAllocator(pcfg, B)
+        rng = np.random.default_rng(1)
+        L, kv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+        cont_k = np.zeros((B, T, kv, hd), np.float32)
+        cont_v = np.zeros((B, T, kv, hd), np.float32)
+        for t in range(T):
+            k_new = rng.normal(0, 1, (L, B, 1, kv, hd)).astype(np.float32)
+            v_new = rng.normal(0, 1, (L, B, 1, kv, hd)).astype(np.float32)
+            for b in range(B):
+                alloc.ensure(b, t + 1)
+            cache["block_table"] = jnp.asarray(alloc.table(B))
+            cache = paged_write(cache, (jnp.asarray(k_new), jnp.asarray(v_new)),
+                                jnp.full((B,), t, jnp.int32), pcfg)
+            cont_k[:, t] = k_new[0, :, 0]
+            cont_v[:, t] = v_new[0, :, 0]
+        gk, gv, glens = paged_gather(cache, pcfg)
+        q = jnp.asarray(rng.normal(0, 1, (B, 1, kv, 2, hd)), jnp.float32)
+        out_paged = attend_decode(q, gk[0], gv[0], jnp.full((B,), T))
+        out_cont = attend_decode(q, jnp.asarray(cont_k), jnp.asarray(cont_v),
+                                 jnp.full((B,), T))
+        np.testing.assert_allclose(np.asarray(out_paged), np.asarray(out_cont),
+                                   rtol=1e-5, atol=1e-6)
+
+
+class TestConstrainedDecoding:
+    """Allow-list / grammar-constrained decoding (paper future work (iii))."""
+
+    def test_tokens_always_allowed(self):
+        rng = np.random.default_rng(7)
+        B, V = 6, 64
+        z = jnp.asarray(rng.normal(0, 3, (B, V)).astype(np.float32))
+        allow = jnp.asarray(rng.random((B, V)) < 0.3)
+        allow = allow.at[:, 0].set(True)      # never-empty support
+        for algo in ("reference", "truncation_first", "shvs", "gumbel"):
+            dp = DecisionPlane(V, algorithm=algo, k_cap=32, seed=3)
+            params = SamplingParams.broadcast(B, SamplingConfig(
+                temperature=0.9, top_k=10))
+            state = dp.init_state(B)
+            allowed = np.asarray(allow)
+            for step in range(15):
+                t, state, _ = dp.step(z, state, params, step,
+                                      allow_mask=allow)
+                assert allowed[np.arange(B), np.asarray(t)].all(), algo
+
+    def test_constrained_distribution_exact(self):
+        rng = np.random.default_rng(8)
+        B, V = 2, 48
+        z = jnp.asarray(rng.normal(0, 2, (B, V)).astype(np.float32))
+        allow = jnp.asarray(rng.random((B, V)) < 0.5).at[:, 0].set(True)
+        params = SamplingParams.broadcast(B, SamplingConfig(temperature=1.0))
+        masked = jnp.where(allow, z, -1e30)
+        target = np.asarray(masked_probs_reference(masked, params))
+        dp = DecisionPlane(V, algorithm="shvs", k_cap=32, seed=0)
+        state = dp.init_state(B)
+        stepped = jax.jit(dp.step)
+        N = 4000
+        toks = np.stack([np.asarray(stepped(z, state, params, s,
+                                            allow_mask=allow)[0])
+                         for s in range(N)])
+        for b in range(B):
+            emp = np.bincount(toks[:, b], minlength=V) / N
+            assert 0.5 * np.abs(emp - target[b]).sum() < 0.06

@@ -1,0 +1,164 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.config import SamplingConfig
+from repro.core import penalties as pen
+from repro.core.sampling import (SamplingParams, filter_mask_reference,
+                                 masked_probs_reference,
+                                 truncation_first_sample)
+from repro.core.shvs import make_hot_set, shvs_masses, shvs_sample
+from repro.core.sizing import SizingModel, fit_affine_cost
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _z(data, B, V, scale=3.0):
+    seed = data.draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0, scale, (B, V)).astype(np.float32)), rng
+
+
+@given(st.data())
+@settings(**SETTINGS)
+def test_histogram_update_commutes(data):
+    """Order of incremental updates never matters (Eq. 5 is a sum)."""
+    V = data.draw(st.integers(4, 64))
+    B = data.draw(st.integers(1, 4))
+    T = data.draw(st.integers(1, 8))
+    seed = data.draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, V, (T, B))
+    s1 = pen.init_state(B, V)
+    for t in range(T):
+        s1 = pen.update_histograms(s1, jnp.asarray(toks[t]))
+    s2 = pen.init_state(B, V)
+    for t in rng.permutation(T):
+        s2 = pen.update_histograms(s2, jnp.asarray(toks[t]))
+    np.testing.assert_array_equal(np.asarray(s1.output_counts),
+                                  np.asarray(s2.output_counts))
+
+
+@given(st.data())
+@settings(**SETTINGS)
+def test_penalties_never_raise_seen_positive_logits(data):
+    """Penalties only make seen tokens less likely (for λ_rep ≥ 1, λ ≥ 0)."""
+    V, B = 32, 3
+    z, rng = _z(data, B, V)
+    prompts = jnp.asarray(rng.integers(0, V, (B, 5)))
+    state = pen.init_state(B, V, prompt_tokens=prompts)
+    lam = data.draw(st.floats(1.0, 3.0))
+    pres = data.draw(st.floats(0.0, 2.0))
+    freq = data.draw(st.floats(0.0, 2.0))
+    out = pen.apply_penalties(z, state, SamplingConfig(
+        repetition_penalty=lam, presence_penalty=pres, frequency_penalty=freq))
+    seen = np.asarray(state.prompt_mask | state.output_mask)
+    z_np, out_np = np.asarray(z), np.asarray(out)
+    assert (out_np[seen] <= z_np[seen] + 1e-5).all()
+    unseen_same = np.isclose(out_np[~seen], z_np[~seen], atol=1e-5)
+    assert unseen_same.all()
+
+
+@given(st.data())
+@settings(**SETTINGS)
+def test_truncation_support_equals_reference_support(data):
+    """Whenever the truncation declares itself exact, its kept-set size must
+    equal the reference filter support exactly."""
+    B = data.draw(st.integers(1, 6))
+    V = data.draw(st.sampled_from([32, 64, 128]))
+    z, rng = _z(data, B, V)
+    top_k = data.draw(st.sampled_from([0, 3, 8, 16]))
+    top_p = data.draw(st.sampled_from([1.0, 0.85, 0.95]))
+    min_p = data.draw(st.sampled_from([0.0, 0.05]))
+    temp = data.draw(st.floats(0.3, 1.5))
+    params = SamplingParams.broadcast(B, SamplingConfig(
+        temperature=temp, top_k=top_k, top_p=top_p, min_p=min_p))
+    res = truncation_first_sample(z, params, jnp.full((B,), 0.37), k_cap=V)
+    mask = filter_mask_reference(z / max(temp, 1e-6), params)
+    exact = np.asarray(res.exact)
+    kept, ref = np.asarray(res.kept), np.asarray(mask.sum(-1))
+    assert (kept[exact] == ref[exact]).all()
+
+
+@given(st.data())
+@settings(**SETTINGS)
+def test_trunc_token_in_reference_support(data):
+    B, V = 4, 64
+    z, rng = _z(data, B, V)
+    top_k = data.draw(st.sampled_from([2, 5, 10]))
+    u = jnp.asarray(rng.random(B).astype(np.float32))
+    params = SamplingParams.broadcast(B, SamplingConfig(temperature=0.8,
+                                                        top_k=top_k))
+    toks = np.asarray(truncation_first_sample(z, params, u, k_cap=32).tokens)
+    mask = np.asarray(filter_mask_reference(z / 0.8, params))
+    assert mask[np.arange(B), toks].all()
+
+
+@given(st.data())
+@settings(**SETTINGS)
+def test_shvs_masses_partition_total(data):
+    """S_hot + S_tail == full softmax normalizer, for any hot set."""
+    B = data.draw(st.integers(1, 4))
+    V = data.draw(st.sampled_from([32, 96, 256]))
+    H = data.draw(st.integers(1, V - 1))
+    z, rng = _z(data, B, V)
+    hot = make_hot_set(jnp.asarray(np.sort(rng.choice(V, H, replace=False)),
+                                   jnp.int32), V)
+    m, s_hot, s_tail, tail_max = shvs_masses(z, hot)
+    total = np.exp(np.asarray(z) - np.asarray(m)[:, None]).sum(-1)
+    np.testing.assert_allclose(np.asarray(s_hot + s_tail), total, rtol=1e-4)
+    alpha = np.asarray(s_hot / (s_hot + s_tail))
+    assert ((alpha >= 0) & (alpha <= 1)).all()
+
+
+@given(st.data())
+@settings(max_examples=10, deadline=None)
+def test_shvs_tokens_in_support(data):
+    """SHVS never emits a token outside the reference filter support when
+    every row is exact (guard passed or fallback exact)."""
+    B, V, H = 3, 96, 24
+    z, rng = _z(data, B, V)
+    hot_idx = jnp.asarray(np.sort(rng.choice(V, H, replace=False)), jnp.int32)
+    hot = make_hot_set(hot_idx, V)
+    top_k = data.draw(st.sampled_from([4, 10]))
+    params = SamplingParams.broadcast(B, SamplingConfig(temperature=0.9,
+                                                        top_k=top_k))
+    u = jnp.asarray(rng.random((B, 3)).astype(np.float32))
+    r = shvs_sample(z, params, hot, u[:, 0], u[:, 1], u[:, 2], k_cap=48)
+    mask = np.asarray(filter_mask_reference(z / 0.9, params))
+    ok = ~np.asarray(r.needs_reference)
+    toks = np.asarray(r.tokens)
+    assert mask[np.arange(B), toks][ok].all()
+
+
+@given(st.data())
+@settings(**SETTINGS)
+def test_affine_fit_recovers_parameters(data):
+    c0 = data.draw(st.floats(1e-7, 1e-3))
+    c = data.draw(st.floats(1e-10, 1e-6))
+    hs = np.asarray([128, 512, 2048, 8192, 16384], np.float64)
+    times = c0 + c * hs
+    c0_fit, c_fit = fit_affine_cost(hs, times)
+    assert abs(c0_fit - c0) < 1e-6 + 0.01 * c0
+    assert abs(c_fit - c) < 1e-12 + 0.01 * c
+
+
+@given(st.data())
+@settings(max_examples=15, deadline=None)
+def test_sizing_model_hstar_is_argmin(data):
+    """H* from the first-order condition must (approximately) minimize F."""
+    s = data.draw(st.floats(1.02, 1.5))
+    V = 16384
+    ranks = np.arange(1, V + 1, dtype=np.float64)
+    p = ranks ** (-s)
+    p /= p.sum()
+    cum = np.cumsum(p)
+    hs = np.unique(np.geomspace(8, V, 64).astype(np.int64))
+    model = SizingModel(c0=1e-6, c=1e-9, vocab_size=V,
+                        alpha_hs=hs.astype(np.float64), alpha_vals=cum[hs - 1])
+    h_star = model.optimal_h()
+    grid = np.arange(8, V, 64)
+    f_min = model.expected_cost(grid).min()
+    assert model.expected_cost(h_star) <= f_min * 1.02

@@ -1,0 +1,175 @@
+"""Decision-plane sampling: penalties, truncation-first exactness, filters."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import SamplingConfig
+from repro.core import penalties as pen
+from repro.core.sampling import (SamplingParams, filter_mask_reference,
+                                 masked_probs_reference, sample_reference,
+                                 truncation_first_sample)
+
+
+def _params(B, **kw):
+    return SamplingParams.broadcast(B, SamplingConfig(**kw))
+
+
+class TestPenalties:
+    def test_histogram(self):
+        toks = jnp.asarray([[1, 2, 2, 0], [3, 3, 3, 3]])
+        h = pen.histogram(toks, 5)
+        assert h[0, 2] == 2 and h[0, 1] == 1 and h[0, 0] == 1
+        assert h[1, 3] == 4
+
+    def test_histogram_respects_lens(self):
+        toks = jnp.asarray([[1, 2, 2, 0]])
+        h = pen.histogram(toks, 5, lens=jnp.asarray([2]))
+        assert h[0, 1] == 1 and h[0, 2] == 1 and h[0, 0] == 0
+
+    def test_incremental_update_eq5(self):
+        """C_o^{s+1} = C_o^s + Hist(Y_s): incremental == batch rebuild."""
+        rng = np.random.default_rng(0)
+        B, V, T = 3, 16, 10
+        state = pen.init_state(B, V)
+        toks = rng.integers(0, V, (T, B))
+        for t in range(T):
+            state = pen.update_histograms(state, jnp.asarray(toks[t]))
+        rebuilt = pen.histogram(jnp.asarray(toks.T), V)
+        np.testing.assert_array_equal(np.asarray(state.output_counts),
+                                      np.asarray(rebuilt))
+
+    def test_update_skips_inactive(self):
+        state = pen.init_state(2, 8)
+        state = pen.update_histograms(state, jnp.asarray([1, 2]),
+                                      active=jnp.asarray([True, False]))
+        assert state.output_counts[0, 1] == 1
+        assert state.output_counts[1, 2] == 0
+
+    def test_repetition_penalty_divides_seen(self):
+        state = pen.init_state(1, 4, prompt_tokens=jnp.asarray([[2]]))
+        z = jnp.asarray([[2.0, -2.0, 2.0, 1.0]])
+        out = pen.apply_penalties(z, state, SamplingConfig(repetition_penalty=2.0))
+        assert out[0, 2] == pytest.approx(1.0)    # seen positive: /2
+        assert out[0, 0] == pytest.approx(2.0)    # unseen: unchanged
+        # seen negative would be *2 (penalized downward)
+        state2 = pen.init_state(1, 4, prompt_tokens=jnp.asarray([[1]]))
+        out2 = pen.apply_penalties(z, state2, SamplingConfig(repetition_penalty=2.0))
+        assert out2[0, 1] == pytest.approx(-4.0)
+
+    def test_presence_frequency(self):
+        state = pen.init_state(1, 4)
+        state = pen.update_histograms(state, jnp.asarray([1]))
+        state = pen.update_histograms(state, jnp.asarray([1]))
+        z = jnp.zeros((1, 4))
+        out = pen.apply_penalties(z, state, SamplingConfig(presence_penalty=0.5,
+                                                           frequency_penalty=0.25))
+        assert out[0, 1] == pytest.approx(-0.5 - 2 * 0.25)
+        assert out[0, 0] == pytest.approx(0.0)
+
+    def test_rows_vectorized_matches_scalar(self):
+        rng = np.random.default_rng(1)
+        B, V = 4, 32
+        z = jnp.asarray(rng.normal(size=(B, V)).astype(np.float32))
+        state = pen.init_state(B, V,
+                               prompt_tokens=jnp.asarray(rng.integers(0, V, (B, 6))))
+        cfg = SamplingConfig(repetition_penalty=1.3, presence_penalty=0.2,
+                             frequency_penalty=0.1)
+        a = pen.apply_penalties(z, state, cfg)
+        b = pen.apply_penalties_rows(
+            z, state, jnp.full((B,), 1.3), jnp.full((B,), 0.2),
+            jnp.full((B,), 0.1))
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+class TestTruncationFirst:
+    """§5.2: softmax on K_b == masked softmax over V; same support, same
+    distribution as the reference."""
+
+    @pytest.mark.parametrize("kw", [dict(top_k=8), dict(top_k=3, top_p=0.8),
+                                    dict(top_p=0.9), dict(min_p=0.1),
+                                    dict(top_k=16, min_p=0.05)])
+    def test_support_matches_reference(self, kw):
+        rng = np.random.default_rng(0)
+        B, V = 8, 64
+        z = jnp.asarray(rng.normal(0, 3, (B, V)).astype(np.float32))
+        params = _params(B, temperature=0.7, **kw)
+        mask = filter_mask_reference(z / 0.7, params)
+        res = truncation_first_sample(z, params, jnp.full((B,), 0.5), k_cap=32)
+        assert bool(res.exact.all())
+        # kept-count must equal the reference support size
+        np.testing.assert_array_equal(np.asarray(res.kept),
+                                      np.asarray(mask.sum(-1)))
+
+    def test_distribution_matches_reference(self):
+        """Empirical TVD between truncation-first and the target must sit at
+        the Monte-Carlo noise floor."""
+        rng = np.random.default_rng(0)
+        B, V, N = 2, 48, 6000
+        z = jnp.asarray(rng.normal(0, 2.5, (B, V)).astype(np.float32))
+        params = _params(B, temperature=0.9, top_k=12, top_p=0.95)
+        target = np.asarray(masked_probs_reference(z, params))
+        u = jax.random.uniform(jax.random.PRNGKey(0), (N, B))
+        toks = jax.vmap(lambda uu: truncation_first_sample(
+            z, params, uu, k_cap=24).tokens)(u)
+        toks = np.asarray(toks)
+        for b in range(B):
+            emp = np.bincount(toks[:, b], minlength=V) / N
+            tvd = 0.5 * np.abs(emp - target[b]).sum()
+            assert tvd < 0.05, tvd
+
+    def test_greedy_temperature_zero(self):
+        rng = np.random.default_rng(0)
+        z = jnp.asarray(rng.normal(0, 3, (4, 32)).astype(np.float32))
+        params = _params(4, temperature=0.0)
+        t1 = truncation_first_sample(z, params, jnp.full((4,), 0.99), k_cap=8)
+        t2 = sample_reference(z, params, jnp.full((4,), 0.13))
+        np.testing.assert_array_equal(np.asarray(t1.tokens),
+                                      np.asarray(jnp.argmax(z, -1)))
+        np.testing.assert_array_equal(np.asarray(t1.tokens), np.asarray(t2))
+
+    def test_inexact_flag_when_nucleus_exceeds_cap(self):
+        # near-uniform distribution, top_p=0.99, tiny cap -> must flag inexact
+        z = jnp.zeros((2, 128)) + 0.01 * jax.random.normal(
+            jax.random.PRNGKey(0), (2, 128))
+        params = _params(2, temperature=1.0, top_p=0.99)
+        res = truncation_first_sample(z, params, jnp.full((2,), 0.5), k_cap=16)
+        assert not bool(res.exact.any())
+
+    def test_tokens_always_in_support(self):
+        rng = np.random.default_rng(2)
+        B, V = 16, 64
+        z = jnp.asarray(rng.normal(0, 3, (B, V)).astype(np.float32))
+        params = _params(B, temperature=0.8, top_k=5)
+        mask = np.asarray(filter_mask_reference(z / 0.8, params))
+        for i in range(50):
+            u = jax.random.uniform(jax.random.PRNGKey(i), (B,))
+            toks = np.asarray(truncation_first_sample(z, params, u,
+                                                      k_cap=16).tokens)
+            assert mask[np.arange(B), toks].all()
+
+
+class TestDeterminism:
+    def test_same_uniforms_same_tokens(self):
+        rng = np.random.default_rng(0)
+        z = jnp.asarray(rng.normal(0, 2, (8, 64)).astype(np.float32))
+        params = _params(8, temperature=0.9, top_k=10)
+        u = jax.random.uniform(jax.random.PRNGKey(7), (8,))
+        a = truncation_first_sample(z, params, u, k_cap=16).tokens
+        b = truncation_first_sample(z, params, u, k_cap=16).tokens
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_row_independence(self):
+        """Each row's token depends only on its own logits/uniform — the
+        property that makes sequence-parallel sharding exact (§5.1)."""
+        rng = np.random.default_rng(0)
+        z = jnp.asarray(rng.normal(0, 2, (8, 64)).astype(np.float32))
+        params = _params(8, temperature=0.9, top_k=10)
+        u = jax.random.uniform(jax.random.PRNGKey(7), (8,))
+        full = truncation_first_sample(z, params, u, k_cap=16).tokens
+        for lo, hi in ((0, 4), (4, 8)):
+            part = truncation_first_sample(
+                z[lo:hi], _params(hi - lo, temperature=0.9, top_k=10),
+                u[lo:hi], k_cap=16).tokens
+            np.testing.assert_array_equal(np.asarray(full[lo:hi]),
+                                          np.asarray(part))

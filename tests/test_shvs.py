@@ -1,0 +1,144 @@
+"""SHVS: rejection correctness (Eq. 9), containment guards, acceptance ≈ α."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import SamplingConfig
+from repro.core.hot_vocab import build_hot_set, counts_from_trace, synthetic_trace
+from repro.core.sampling import SamplingParams, masked_probs_reference
+from repro.core.shvs import make_hot_set, shvs_masses, shvs_sample
+
+
+def _setup(B=4, V=256, H=48, boost=3.0, seed=0):
+    rng = np.random.default_rng(seed)
+    z = jnp.asarray(rng.normal(0, 3, (B, V)).astype(np.float32))
+    hot_idx = jnp.asarray(np.sort(rng.choice(V, H, replace=False)), jnp.int32)
+    z = z.at[:, hot_idx].add(boost)
+    return z, make_hot_set(hot_idx, V)
+
+
+def _params(B, **kw):
+    return SamplingParams.broadcast(B, SamplingConfig(**kw))
+
+
+def _empirical_tvd(z, params, hot, target, N=6000, k_cap=64):
+    keys = jax.random.split(jax.random.PRNGKey(1), N)
+
+    def draw(k):
+        u = jax.random.uniform(k, (z.shape[0], 3))
+        return shvs_sample(z, params, hot, u[:, 0], u[:, 1], u[:, 2],
+                           k_cap=k_cap).tokens
+
+    toks = np.asarray(jax.vmap(draw)(keys))
+    tvds = []
+    for b in range(z.shape[0]):
+        emp = np.bincount(toks[:, b], minlength=z.shape[1]) / N
+        tvds.append(0.5 * np.abs(emp - target[b]).sum())
+    return float(np.mean(tvds))
+
+
+class TestMasses:
+    def test_alpha_definition(self):
+        z, hot = _setup()
+        m, s_hot, s_tail, tail_max = shvs_masses(z, hot)
+        # direct computation
+        w = np.exp(np.asarray(z) - np.asarray(z).max(-1, keepdims=True))
+        hm = np.asarray(hot.mask)
+        np.testing.assert_allclose(np.asarray(s_hot), (w * hm).sum(-1),
+                                   rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(s_tail), (w * ~hm).sum(-1),
+                                   rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(tail_max),
+                                   np.where(~hm, np.asarray(z), -1e30).max(-1),
+                                   rtol=1e-5)
+
+
+class TestExactness:
+    """Eq. 9: P[y=v] = p̃_v — the paper's Fig. 13 claim, tested at the
+    Monte-Carlo noise floor for every filter configuration."""
+
+    @pytest.mark.parametrize("kw", [dict(), dict(top_k=10), dict(top_p=0.9),
+                                    dict(min_p=0.08),
+                                    dict(top_k=20, top_p=0.95)])
+    def test_tvd_at_noise_floor(self, kw):
+        z, hot = _setup()
+        params = _params(z.shape[0], temperature=0.8, **kw)
+        target = np.asarray(masked_probs_reference(z, params))
+        tvd = _empirical_tvd(z, params, hot, target)
+        assert tvd < 0.06, (kw, tvd)
+
+    def test_tvd_with_low_alpha_hot_set(self):
+        """Even a BAD hot set must stay exact (rejections/fallbacks do the
+        work) — the guard is about performance, never correctness."""
+        z, hot = _setup(boost=0.0)     # hot set no better than random
+        params = _params(z.shape[0], temperature=1.0, top_k=15)
+        target = np.asarray(masked_probs_reference(z, params))
+        tvd = _empirical_tvd(z, params, hot, target)
+        assert tvd < 0.06, tvd
+
+
+class TestAcceptance:
+    def test_acceptance_rate_matches_alpha(self):
+        """No-filter path: acceptance probability IS α_b (Eq. 8)."""
+        z, hot = _setup(B=2, boost=4.0)
+        params = _params(2, temperature=1.0)
+        N = 4000
+        keys = jax.random.split(jax.random.PRNGKey(2), N)
+
+        def draw(k):
+            u = jax.random.uniform(k, (2, 3))
+            r = shvs_sample(z, params, hot, u[:, 0], u[:, 1], u[:, 2],
+                            k_cap=48)
+            return r.accepted, r.alpha
+
+        acc, alpha = jax.vmap(draw)(keys)
+        acc = np.asarray(acc).mean(0)
+        alpha = np.asarray(alpha)[0]
+        np.testing.assert_allclose(acc, alpha, atol=0.03)
+
+    def test_good_hot_set_high_acceptance(self):
+        """Zipf-matched hot set reaches the paper's 80–95% acceptance."""
+        rng = np.random.default_rng(0)
+        V, H, B = 1024, 256, 8   # hot = top quarter (paper: 32k of ~128k)
+        # Zipf-like logits concentrated on low ids; hot set = low ids
+        ranks = np.arange(1, V + 1)
+        base = -1.1 * np.log(ranks)
+        z = jnp.asarray(base[None] + rng.normal(0, 0.5, (B, V)))
+        hot = make_hot_set(jnp.arange(H, dtype=jnp.int32), V)
+        params = _params(B, temperature=1.0)
+        u = jax.random.uniform(jax.random.PRNGKey(0), (B, 3))
+        r = shvs_sample(z.astype(jnp.float32), params, hot, u[:, 0], u[:, 1],
+                        u[:, 2], k_cap=128)
+        assert float(r.alpha.mean()) > 0.8
+
+
+class TestGuards:
+    def test_containment_guard_true_when_support_in_hot(self):
+        z, hot = _setup(boost=30.0)   # hot towers above the tail
+        params = _params(z.shape[0], temperature=1.0, top_k=8)
+        u = jax.random.uniform(jax.random.PRNGKey(0), (z.shape[0], 3))
+        r = shvs_sample(z, params, hot, u[:, 0], u[:, 1], u[:, 2], k_cap=48)
+        assert bool(r.exact_fast.all())
+
+    def test_containment_guard_false_when_topk_spills(self):
+        z, hot = _setup(boost=-30.0)  # hot set is the WORST tokens
+        params = _params(z.shape[0], temperature=1.0, top_k=8)
+        u = jax.random.uniform(jax.random.PRNGKey(0), (z.shape[0], 3))
+        r = shvs_sample(z, params, hot, u[:, 0], u[:, 1], u[:, 2], k_cap=48)
+        assert not bool(r.exact_fast.any())
+
+
+class TestHotVocab:
+    def test_build_hot_set_picks_most_frequent(self):
+        trace = synthetic_trace(512, 20000, s=1.3, seed=0)
+        counts = counts_from_trace(trace, 512)
+        hot = build_hot_set(counts, 32, 512)
+        hot_ids = set(np.asarray(hot.indices).tolist())
+        top32 = set(np.argsort(-counts)[:32].tolist())
+        assert len(hot_ids & top32) >= 30   # stable up to count ties
+
+    def test_hot_mask_consistent(self):
+        hot = build_hot_set(np.arange(100)[::-1], 10, 100)
+        assert int(hot.mask.sum()) == 10
+        assert bool(hot.mask[np.asarray(hot.indices)].all())
