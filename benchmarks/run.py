@@ -20,6 +20,8 @@ MODULES = [
     ("fig3", "benchmarks.fig3_throughput", "Fig 3: end-to-end throughput"),
     ("fig5", "benchmarks.fig_latency_ecdf", "Fig 4/5/7: TPOT P95"),
     ("fig6", "benchmarks.fig6_load_latency", "Fig 6: load-latency"),
+    ("overlap", "benchmarks.fig_overlap",
+     "Overlapped engine + chunked prefill"),
     ("fig10", "benchmarks.fig10_ablation", "Fig 10: ablation ladder"),
     ("fig11", "benchmarks.fig11_sizing", "Fig 11/12: sizing model"),
     ("fig13", "benchmarks.fig13_tvd", "Fig 13: TVD exactness"),

@@ -1,0 +1,12 @@
+"""SIMPLE reproduction: a disaggregated decision plane for LLM serving.
+
+See DESIGN.md for the system design and ROADMAP.md for open items.
+"""
+import jax
+
+# The decision plane's determinism contract (§5.1, DESIGN.md §2) requires
+# random bits to be independent of how the program is partitioned: the same
+# (seed, request, position) must draw the same uniforms on 1 sampler or 512.
+# Legacy threefry lowers sharded RNG shard-dependently; the partitionable
+# variant is value-identical under any GSPMD partitioning.
+jax.config.update("jax_threefry_partitionable", True)

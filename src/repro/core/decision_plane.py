@@ -11,9 +11,11 @@ runtime can dispatch the next microbatch's forward while sampling for the
 previous one completes (the paper's "overlappable" property, realized via
 async dispatch rather than a CPU sidecar; see DESIGN.md §2).
 
-Determinism: uniforms come from a counter-based key ``fold_in(seed, step)``,
-so tokens are bit-identical for 1 sampler or 512 (the paper's pre-generated
-RNG scheme, §5.1).
+Determinism: uniforms come from counter-based keys — ``fold_in(seed, step)``
+for standalone use, or ``fold_in(fold_in(seed, request), position)`` when the
+engine passes ``rng_tags`` — so tokens are bit-identical for 1 sampler or 512
+and invariant to scheduling/admission timing (the paper's pre-generated RNG
+scheme, §5.1; DESIGN.md §2).
 """
 from __future__ import annotations
 
@@ -81,9 +83,26 @@ class DecisionPlane:
                                  jnp.asarray(step, jnp.uint32))
         return jax.random.uniform(key, (batch, 3), jnp.float32)
 
+    def uniforms_tagged(self, nonces, positions):
+        """Per-request (B, 3) uniforms: row b draws from
+        ``fold_in(fold_in(seed, nonce_b), pos_b)`` (the paper's pre-generated
+        RNG, §5.1/DESIGN.md §2). Tying the counter to (request, position)
+        instead of the global iteration makes tokens independent of
+        *scheduling*: a request samples the same stream whether it was
+        admitted one step earlier or later, on any slot, in overlapped or
+        sequential engine mode."""
+        base = jax.random.PRNGKey(self.seed)
+
+        def row(n, p):
+            k = jax.random.fold_in(jax.random.fold_in(base, n), p)
+            return jax.random.uniform(k, (3,), jnp.float32)
+
+        return jax.vmap(row)(jnp.asarray(nonces, jnp.uint32),
+                             jnp.asarray(positions, jnp.uint32))
+
     # -- the per-iteration decision ------------------------------------------
     def step(self, logits, state: pen.PenaltyState, params: SamplingParams,
-             step_idx, active=None, allow_mask=None):
+             step_idx, active=None, allow_mask=None, rng_tags=None):
         """logits: (B, V) from the LM head. Returns (tokens, state, stats).
 
         ``allow_mask``: optional (B, V) bool — grammar/allow-list constrained
@@ -91,15 +110,27 @@ class DecisionPlane:
         masked to −inf BEFORE the filter pipeline, so truncation-first /
         SHVS exactness machinery applies unchanged (the mask simply composes
         into Filter(·), §5.2).
+
+        ``rng_tags``: optional ``(nonces (B,), positions (B,))`` — draw
+        per-request uniforms (see :meth:`uniforms_tagged`) instead of the
+        per-iteration stream keyed on ``step_idx``. The serving engine passes
+        (request-id, output-position) so sampled tokens are invariant to
+        admission timing and slot placement (DESIGN.md §2).
         """
         B = logits.shape[0]
         if allow_mask is not None:
             logits = jnp.where(allow_mask, logits, -1e30)
+
+        def draw_uniforms():
+            if rng_tags is not None:
+                return self.uniforms_tagged(*rng_tags)
+            return self.uniforms(step_idx, B)
+
         from repro.models import dist as _dist
         if self.parallelism == "hierarchical" and _dist.get_ctx().active:
             # beyond-paper: decide in place on (B@batch, V@model) shards
             from repro.core.hierarchical import hierarchical_sample
-            u = self.uniforms(step_idx, B)
+            u = draw_uniforms()
             tokens, state, res = hierarchical_sample(
                 logits, state, params, u, self.hot_set, k_cap=self.k_cap)
             if active is not None:
@@ -110,7 +141,7 @@ class DecisionPlane:
         # S1: re-shard the decision plane along the batch axis
         logits = reshard_for_sampling(logits, self.parallelism)
         state = shard_decision_state(state, self.parallelism)
-        u = self.uniforms(step_idx, B)
+        u = draw_uniforms()
         u = shard_decision_state(u, self.parallelism)
 
         z = pen.apply_penalties_rows(logits, state, params.repetition_penalty,

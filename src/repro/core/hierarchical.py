@@ -215,13 +215,12 @@ def hierarchical_sample(logits, state: pen.PenaltyState,
 
     mspec = dist.model_spec_entry()
     uspec = P(b_entry, None)
-    out = jax.shard_map(
+    out = dist.shard_map(
         shard_fn, mesh=mesh,
         in_specs=(P(b_entry, mspec), P(b_entry, mspec), P(b_entry, mspec),
                   SamplingParams(*([P(b_entry)] * 7)), uspec, P(mspec)),
         out_specs=(P(b_entry), P(b_entry, mspec), P(b_entry), P(b_entry),
                    P(b_entry)),
-        check_vma=False,
     )(logits, state.prompt_counts, state.output_counts, params, uniforms,
       hot_mask.astype(jnp.int32))
     tokens, co2, accepted, alpha, exact_fast = out

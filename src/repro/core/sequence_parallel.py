@@ -68,14 +68,33 @@ def reshard_for_sampling(logits: jnp.ndarray, mode: str) -> jnp.ndarray:
                                           concat_axis=1, tiled=True)
 
             out_entry = tuple(b_axes) + m_axes
-            return jax.shard_map(
+            return dist.shard_map(
                 reshard, mesh=ctx.mesh,
                 in_specs=P(b_entry, m_entry),
-                out_specs=P(out_entry if out_entry else None, None),
-                check_vma=False)(logits)
+                out_specs=P(out_entry if out_entry else None, None))(logits)
         entry = sampler_batch_entry()
         return dist.constrain(logits, entry, None)
     if mode == "vocab_gather":
+        # Materialize the gather as ONE explicit all-gather so every
+        # downstream reduction sees whole rows. A bare sharding constraint
+        # lets GSPMD keep V sharded through the sums (partial-sum +
+        # all-reduce), which changes float reduction order and breaks the
+        # bit-determinism contract vs the single-device plane (§5.1).
+        m_axes = tuple(ctx.model_axes or ())
+        V = logits.shape[1]
+        if m_axes and ctx.axis_size(m_axes) > 1 and \
+                V % ctx.axis_size(m_axes) == 0:
+            from jax.sharding import PartitionSpec as P
+            b_entry = dist.batch_spec_entry()
+            m_entry = dist.model_spec_entry()
+
+            def gather(x):
+                return jax.lax.all_gather(x, m_axes, axis=1, tiled=True)
+
+            return dist.shard_map(
+                gather, mesh=ctx.mesh,
+                in_specs=P(b_entry, m_entry),
+                out_specs=P(b_entry, None))(logits)
         return dist.constrain(logits, dist.batch_spec_entry(), None)
     raise ValueError(f"unknown sampling parallelism {mode!r}")
 

@@ -1,19 +1,33 @@
 """The serving engine: continuous batching + the SIMPLE decision plane.
 
-Architecture (paper §4.2): the *data plane* (model forward) and the
-*decision plane* (DecisionPlane.step) are two separately jitted programs.
-The engine's iteration is:
+Architecture (paper §4.2, DESIGN.md §2): the *data plane* (model forward)
+and the *decision plane* (DecisionPlane.step) are two separately jitted
+programs. The engine's iteration is:
 
   ⓪ scheduler.schedule()            — retire / admit / emit scheduling output
-  ① prefill newly admitted requests — masked insert into the batch cache
+  ① prefill newly admitted requests — masked insert (or one prompt chunk)
   ②③ decode forward                 — logits leave sharded (B@batch, V@model)
   ④⑤ decision plane                 — S1 re-shard + S2/S3 sampling
   ⑥ scheduler.commit()              — tokens back into request state
 
-Because the decision plane is its own program consuming the forward's
-output, the runtime can dispatch the next iteration's forward before the
-previous decision completes (async dispatch) — the JAX realization of the
-paper's "overlappable" property.
+**Overlapped mode (default).** Steps ②–⑤ are dispatched asynchronously and
+only *device* values flow between iterations: iteration N's sampled tokens
+feed iteration N+1's forward as a JAX future, never crossing to the host.
+The host fetch + ⑥ commit for iteration N happen one step late — while the
+device is already running iteration N+1 — so scheduling, stats, and token
+materialization hide behind the forward (the paper's "overlappable"
+property realized via async dispatch rather than a CPU sidecar). The cost
+is a one-step commit lag: a request whose stop condition is in flight gets
+one speculative decode whose token is rolled back at commit, and its slot
+frees one iteration later (DESIGN.md §2). With ``overlap=False`` every
+iteration drains immediately (the classic synchronous loop).
+
+Determinism: uniforms are keyed on (request-id, output position) —
+``DecisionPlane.uniforms_tagged`` — so the token stream of every request is
+bit-identical between overlapped and sequential mode, and invariant to slot
+placement and admission timing. Exception: the beyond-paper ``gumbel``
+algorithm seeds its fast path on the global iteration index, so it is
+reproducible run-to-run but excluded from the cross-mode identity contract.
 
 The engine is deliberately token-only (dense/moe/ssm/hybrid archs); the
 multimodal frontends are exercised by the dry-run and smoke tests.
@@ -21,9 +35,8 @@ multimodal frontends are exercised by the dry-run and smoke tests.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
-from functools import partial
-from typing import Dict, List, Optional
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,8 +46,8 @@ from repro.config import ModelConfig, SamplingConfig, SHVSConfig
 from repro.core.decision_plane import DecisionPlane
 from repro.core.sampling import SamplingParams
 from repro.core import penalties as pen
-from repro.engine.request import Request
-from repro.engine.scheduler import Scheduler
+from repro.engine.request import Request, RequestState
+from repro.engine.scheduler import ChunkTask, Scheduler
 from repro.models.model import Model
 
 
@@ -48,10 +61,27 @@ class EngineConfig:
     k_cap: int = 256
     seed: int = 0
     prompt_bucket: int = 32          # prompts padded to multiples of this
+    overlap: bool = True             # double-buffered iteration loop (§2)
+    prompt_chunk: int = 0            # >0: chunked prefill width (§8)
+    priority_admission: bool = True  # single-chunk prompts admitted first
+    max_admission_wait: int = 64     # aging bound for priority admission
 
 
 def _bucket(n: int, mult: int) -> int:
     return max(mult, ((n + mult - 1) // mult) * mult)
+
+
+@dataclass
+class _Pending:
+    """One dispatched-but-uncommitted device result (DESIGN.md §2)."""
+
+    kind: str                                   # "decode" | "first"
+    tokens: jnp.ndarray                         # (B,) device future
+    step: int = -1
+    stats: Optional[object] = None              # DecisionStats (decode only)
+    active: Optional[np.ndarray] = None         # (B,) bool snapshot
+    slot_request: Optional[List[Optional[Request]]] = None
+    finishers: List[Tuple[int, Request]] = field(default_factory=list)
 
 
 class Engine:
@@ -67,7 +97,23 @@ class Engine:
         self.ecfg = engine_cfg
         self.model = Model(model_cfg)
         self.params = params
-        self.scheduler = Scheduler(engine_cfg.max_batch)
+        # chunked prefill is gated to full-causal dense decoders (§8)
+        self._chunk_ok = (engine_cfg.prompt_chunk > 0
+                          and model_cfg.family in ("dense", "moe")
+                          and not model_cfg.is_encdec
+                          and not model_cfg.sliding_window)
+        chunk = engine_cfg.prompt_chunk if self._chunk_ok else 0
+        # fail fast: a chunk's slab write needs lens + C <= max_seq_len even
+        # for the last partial chunk (worst case lens = window - 1 with
+        # window = max_seq_len - C), i.e. C <= max_seq_len // 2
+        assert chunk <= engine_cfg.max_seq_len // 2, (
+            f"prompt_chunk={chunk} must be <= max_seq_len//2 "
+            f"({engine_cfg.max_seq_len // 2})")
+        self.scheduler = Scheduler(
+            engine_cfg.max_batch, prompt_chunk=chunk,
+            priority_admission=engine_cfg.priority_admission,
+            max_admission_wait=engine_cfg.max_admission_wait,
+            max_prompt=max(chunk, engine_cfg.max_seq_len - chunk))
         self.decision = DecisionPlane(
             model_cfg.vocab_size, algorithm=engine_cfg.algorithm,
             shvs=engine_cfg.shvs, hot_set=hot_set,
@@ -79,7 +125,12 @@ class Engine:
         self.pstate = self.decision.init_state(B)
         self.last_tokens = jnp.zeros((B,), jnp.int32)
         self._sp = _SamplingParamStore(B)
-        self._decode_jit = jax.jit(self._decode_impl, donate_argnums=(1, 2, 3))
+        # per-slot RNG tags: request nonce + next output position (host-side;
+        # activity is decided by the scheduler, so no device sync is needed)
+        self._nonce = np.zeros((B,), np.uint32)
+        self._pos = np.zeros((B,), np.int32)
+        self._pending: List[_Pending] = []
+        self._jit_programs()
         self._prefill_cache: Dict[int, callable] = {}
         self.stats_log: List[dict] = []
         self._hot_counts = hot_counts
@@ -91,12 +142,28 @@ class Engine:
                 vocab_size=model_cfg.vocab_size,
                 h_current=int(self.decision.hot_set.size))
 
+    def _jit_programs(self) -> None:
+        # last_tokens / nonces / pos are never donated — pending commits hold
+        # references to token buffers across dispatches (§2). cache/pstate
+        # donation is skipped on CPU: the CPU runtime executes donating
+        # programs synchronously on the calling thread, which defeats the
+        # async dispatch the overlapped loop is built on.
+        donate = () if jax.default_backend() == "cpu" else (1, 2)
+        self._decode_jit = jax.jit(self._decode_impl, donate_argnums=donate)
+        self._chunk_jit = jax.jit(self._chunk_impl, donate_argnums=donate)
+
     # -- jitted bodies ---------------------------------------------------------
     def _decode_impl(self, params, cache, pstate, last_tokens, sparams,
-                     step, active):
+                     nonces, pos, step, active):
+        lens0 = cache["len"]
         logits, cache = self.model.decode_step(params, last_tokens, cache)
+        # inactive rows (mid-prefill / retired-but-uncommitted slots) must
+        # not advance their cache write offset
+        cache = dict(cache)
+        cache["len"] = jnp.where(active, lens0 + 1, lens0)
         tokens, pstate, stats = self.decision.step(
-            logits, pstate, sparams, step, active=active)
+            logits, pstate, sparams, step, active=active,
+            rng_tags=(nonces, pos))
         tokens = jnp.where(active, tokens, 0)
         return tokens, cache, pstate, stats
 
@@ -110,54 +177,118 @@ class Engine:
         pstate = pen.init_state(P, self.cfg.vocab_size, tokens, true_lens)
         return logits, cache, pstate
 
+    def _chunk_impl(self, params, cache, pstate, toks, counts, mask, finish,
+                    sparams, nonces, last_tokens, step):
+        """One prompt chunk for every mid-prefill row; rows finishing their
+        prompt sample their first token (position 0) in the same program."""
+        logits, cache = self.model.prefill_chunk(params, toks, cache,
+                                                 counts, mask)
+        tokens, pstate, _ = self.decision.step(
+            logits, pstate, sparams, step, active=finish,
+            rng_tags=(nonces, jnp.zeros_like(nonces, jnp.int32)))
+        tokens = jnp.where(finish, tokens, 0)
+        last_tokens = jnp.where(finish, tokens, last_tokens)
+        return tokens, last_tokens, cache, pstate
+
     # -- public API --------------------------------------------------------------
     def submit(self, requests: List[Request]) -> None:
         for r in requests:
             self.scheduler.submit(r)
 
-    def step(self, now: Optional[float] = None) -> dict:
-        """One engine iteration. Returns observability stats."""
-        now = time.perf_counter() if now is None else now
+    @property
+    def in_flight(self) -> int:
+        """Dispatched-but-uncommitted iterations (0 or 1 in overlap mode)."""
+        return len(self._pending)
+
+    def step(self) -> dict:
+        """One engine iteration. Returns observability stats (in overlapped
+        mode: the stats of the iteration committed this call, i.e. lagged by
+        one step)."""
+        # NOTE: no opportunistic "commit early if the device result already
+        # landed" here — is_ready()-style checks make the schedule trace
+        # depend on wall-clock timing, which shifts admission *grouping*
+        # (different (P, Sp) prefill programs → bitwise logit drift) and
+        # breaks run-to-run determinism. The drain point is fixed instead.
         plan = self.scheduler.schedule()
         if plan.new_requests:
             self._admit(plan.new_requests)
-            # a prompt's first token may already satisfy the stop condition
-            plan.active_slots = np.array(
-                [s is not None and not s.should_stop()
-                 for s in self.scheduler.slots])
-        if not plan.active_slots.any():
-            return {}
-        active = jnp.asarray(plan.active_slots)
-        sparams = self._sp.as_params()
-        tokens, self.cache, self.pstate, stats = self._decode_jit(
-            self.params, self.cache, self.pstate, self.last_tokens, sparams,
-            jnp.asarray(self.scheduler.step, jnp.int32), active)
-        self.last_tokens = tokens
-        toks_np = np.asarray(tokens)
-        self.scheduler.commit(toks_np, now=time.perf_counter())
-        rec = {"step": plan.step, "batch": int(active.sum()),
-               "accept_rate": float(stats.accept_rate),
-               "alpha_mean": float(stats.alpha_mean),
-               "fallback_rate": float(stats.fallback_rate)}
+        if plan.new_chunked:
+            self._admit_chunked(plan.new_chunked)
+        if plan.chunks:
+            self._run_chunks(plan.chunks)
+        # refresh decode activity: a prompt's first token may already satisfy
+        # the stop condition; chunk finishers join the decode batch
+        plan.active_slots = np.array(
+            [s is not None and s.state is RequestState.RUNNING
+             and not s.should_stop() for s in self.scheduler.slots])
+        dispatched = bool(plan.active_slots.any())
+        if dispatched:
+            active = jnp.asarray(plan.active_slots)
+            sparams = self._sp.as_params()
+            # .copy(): jnp.asarray can alias host numpy buffers zero-copy on
+            # CPU, and the async in-flight program must not observe the
+            # engine mutating _nonce/_pos after dispatch
+            tokens, self.cache, self.pstate, stats = self._decode_jit(
+                self.params, self.cache, self.pstate, self.last_tokens,
+                sparams, jnp.asarray(self._nonce.copy()),
+                jnp.asarray(self._pos.copy()),
+                jnp.asarray(plan.step, jnp.int32), active)
+            self.last_tokens = tokens
+            self._pos += plan.active_slots
+            self._pending.append(_Pending(
+                kind="decode", tokens=tokens, step=plan.step, stats=stats,
+                active=plan.active_slots.copy(),
+                slot_request=list(plan.slot_request)))
+        # drain: sequential mode syncs everything now; overlapped mode keeps
+        # exactly one decode in flight so the device never waits on the host
+        keep = 1 if (self.ecfg.overlap and dispatched) else 0
+        rec: dict = {}
+        while len(self._pending) > keep:
+            rec = self._drain_one() or rec
+        return rec
+
+    def flush(self) -> None:
+        """Commit every in-flight iteration and retire what finished."""
+        while self._pending:
+            self._drain_one()
+        self.scheduler.retire_finished()
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        steps = 0
+        while (self.scheduler.has_work or self._pending) and \
+                steps < max_steps:
+            self.step()
+            steps += 1
+        self.flush()
+        return self.scheduler.finished
+
+    # -- commit ----------------------------------------------------------------
+    def _drain_one(self) -> Optional[dict]:
+        """Fetch the oldest pending device result to the host and commit it.
+        This is the only place engine iterations block on the device."""
+        ent = self._pending.pop(0)
+        toks_np = np.asarray(ent.tokens)          # host sync point
+        now = time.perf_counter()
+        if ent.kind == "first":
+            for slot, req in ent.finishers:
+                req.record_token(int(toks_np[slot]), now)
+            return None
+        self.scheduler.commit(toks_np, ent.slot_request, ent.active, now=now)
+        rec = {"step": ent.step, "batch": int(ent.active.sum()),
+               "accept_rate": float(ent.stats.accept_rate),
+               "alpha_mean": float(ent.stats.alpha_mean),
+               "fallback_rate": float(ent.stats.fallback_rate)}
         if self._controller is not None:
             new_h = self._controller.observe(rec["alpha_mean"])
             if new_h:
                 from repro.core.hot_vocab import build_hot_set
                 self.decision.hot_set = build_hot_set(
                     self._hot_counts, new_h, self.cfg.vocab_size)
-                # hot-set shape changed: re-jit the decode program
-                self._decode_jit = jax.jit(self._decode_impl,
-                                           donate_argnums=(1, 2, 3))
+                # hot-set shape changed: re-jit the decision programs
+                self._jit_programs()
                 rec["hot_size"] = new_h
         self.stats_log.append(rec)
         return rec
-
-    def run(self, max_steps: int = 10_000) -> List[Request]:
-        steps = 0
-        while self.scheduler.has_work and steps < max_steps:
-            self.step()
-            steps += 1
-        return self.scheduler.finished
 
     # -- admission ------------------------------------------------------------
     def _admit(self, new_requests: List[Request]) -> None:
@@ -178,14 +309,17 @@ class Engine:
         logits, rows_cache, rows_pstate = self._prefill_cache[key](
             self.params, jnp.asarray(toks), jnp.asarray(lens))
         slots = jnp.asarray([r.slot for r in new_requests], jnp.int32)
-        # first sampled token for the new rows via the decision plane
+        rids = np.array([r.request_id for r in new_requests], np.uint32)
+        # first sampled token (position 0) for the new rows
         sp_rows = _SamplingParamStore(P)
         for i, r in enumerate(new_requests):
             sp_rows.set_row(i, r.sampling)
         first, rows_pstate, _ = self.decision.step(
             logits, rows_pstate, sp_rows.as_params(),
-            jnp.asarray(self.scheduler.step, jnp.int32))
-        # insert rows into batch state
+            jnp.asarray(self.scheduler.step, jnp.int32),
+            rng_tags=(jnp.asarray(rids), jnp.zeros((P,), jnp.int32)))
+        # insert rows into batch state (device-side, chains off any
+        # still-running decode through the donated cache/pstate futures)
         self.cache = _insert_rows(self.cache, rows_cache, slots)
         self.pstate = pen.PenaltyState(
             prompt_counts=self.pstate.prompt_counts.at[slots].set(
@@ -195,14 +329,74 @@ class Engine:
         )
         self.last_tokens = self.last_tokens.at[slots].set(first)
         now = time.perf_counter()
-        first_np = np.asarray(first)
+        first_np = np.asarray(first)   # blocks on the prefill program only
         for i, r in enumerate(new_requests):
             self._sp.set_row(r.slot, r.sampling)
-            r.first_token_time = now
-            r.output.append(int(first_np[i]))
-            r.token_times.append(now)
-            if r.should_stop():
-                r.finish_time = now
+            self._nonce[r.slot] = rids[i]
+            self._pos[r.slot] = 1
+            r.record_token(int(first_np[i]), now)
+
+    def _admit_chunked(self, new_chunked: List[Request]) -> None:
+        """Claim slots for chunked-prefill requests: reset the rows' cache
+        offsets and seed their penalty state with the full-prompt histogram
+        (available up front — Eq. 5 is position-independent)."""
+        P = len(new_chunked)
+        V = self.cfg.vocab_size
+        windows = [r.prompt[r.prompt_offset:] for r in new_chunked]
+        maxlen = max(len(w) for w in windows)
+        toks = np.zeros((P, maxlen), np.int32)
+        lens = np.zeros((P,), np.int32)
+        for i, w in enumerate(windows):
+            toks[i, :len(w)] = w
+            lens[i] = len(w)
+        rows_pstate = pen.init_state(P, V, jnp.asarray(toks),
+                                     jnp.asarray(lens))
+        slots = jnp.asarray([r.slot for r in new_chunked], jnp.int32)
+        self.pstate = pen.PenaltyState(
+            prompt_counts=self.pstate.prompt_counts.at[slots].set(
+                rows_pstate.prompt_counts),
+            output_counts=self.pstate.output_counts.at[slots].set(
+                rows_pstate.output_counts),
+        )
+        cache = dict(self.cache)
+        cache["len"] = cache["len"].at[slots].set(0)
+        self.cache = cache
+        for r in new_chunked:
+            self._sp.set_row(r.slot, r.sampling)
+            self._nonce[r.slot] = np.uint32(r.request_id)
+            self._pos[r.slot] = 0
+
+    def _run_chunks(self, chunks: List[ChunkTask]) -> None:
+        """Run one prompt chunk per mid-prefill slot (single (B, C) program);
+        rows that complete their prompt sample their first token and join
+        the decode batch this iteration."""
+        B = self.ecfg.max_batch
+        C = self.scheduler.prompt_chunk
+        toks = np.zeros((B, C), np.int32)
+        counts = np.zeros((B,), np.int32)
+        mask = np.zeros((B,), bool)
+        finish = np.zeros((B,), bool)
+        finishers: List[Tuple[int, Request]] = []
+        for task in chunks:
+            seg = task.request.prompt[task.start:task.end]
+            toks[task.slot, :len(seg)] = seg
+            counts[task.slot] = len(seg)
+            mask[task.slot] = True
+            if task.final:
+                finish[task.slot] = True
+                finishers.append((task.slot, task.request))
+        first, self.last_tokens, self.cache, self.pstate = self._chunk_jit(
+            self.params, self.cache, self.pstate, jnp.asarray(toks),
+            jnp.asarray(counts), jnp.asarray(mask), jnp.asarray(finish),
+            self._sp.as_params(), jnp.asarray(self._nonce.copy()),
+            self.last_tokens, jnp.asarray(self.scheduler.step, jnp.int32))
+        for slot, _ in finishers:
+            self._pos[slot] = 1
+        if finishers:
+            # first tokens are committed through the pending queue so the
+            # device chain is never broken mid-iteration
+            self._pending.append(_Pending(kind="first", tokens=first,
+                                          finishers=finishers))
 
 
 def _insert_rows(batch_cache, rows_cache, slots):
@@ -221,7 +415,8 @@ def _insert_rows(batch_cache, rows_cache, slots):
 
 
 class _SamplingParamStore:
-    """Per-slot sampling parameters as numpy arrays -> SamplingParams."""
+    """Per-slot sampling parameters as numpy arrays -> SamplingParams.
+    The device-side struct is cached and only rebuilt after a row changes."""
 
     def __init__(self, batch: int):
         self.temperature = np.ones(batch, np.float32)
@@ -231,6 +426,7 @@ class _SamplingParamStore:
         self.repetition = np.ones(batch, np.float32)
         self.presence = np.zeros(batch, np.float32)
         self.frequency = np.zeros(batch, np.float32)
+        self._cached: Optional[SamplingParams] = None
 
     def set_row(self, i: int, cfg: SamplingConfig) -> None:
         self.temperature[i] = cfg.temperature
@@ -240,14 +436,20 @@ class _SamplingParamStore:
         self.repetition[i] = cfg.repetition_penalty
         self.presence[i] = cfg.presence_penalty
         self.frequency[i] = cfg.frequency_penalty
+        self._cached = None
 
     def as_params(self) -> SamplingParams:
-        return SamplingParams(
-            temperature=jnp.asarray(self.temperature),
-            top_k=jnp.asarray(self.top_k),
-            top_p=jnp.asarray(self.top_p),
-            min_p=jnp.asarray(self.min_p),
-            repetition_penalty=jnp.asarray(self.repetition),
-            presence_penalty=jnp.asarray(self.presence),
-            frequency_penalty=jnp.asarray(self.frequency),
-        )
+        if self._cached is None:
+            # .copy(): the device structs may alias host numpy buffers
+            # zero-copy; set_row mutations must never reach a program that
+            # is already in flight (or silently change the cached struct)
+            self._cached = SamplingParams(
+                temperature=jnp.asarray(self.temperature.copy()),
+                top_k=jnp.asarray(self.top_k.copy()),
+                top_p=jnp.asarray(self.top_p.copy()),
+                min_p=jnp.asarray(self.min_p.copy()),
+                repetition_penalty=jnp.asarray(self.repetition.copy()),
+                presence_penalty=jnp.asarray(self.presence.copy()),
+                frequency_penalty=jnp.asarray(self.frequency.copy()),
+            )
+        return self._cached

@@ -10,6 +10,7 @@ from repro.config import SamplingConfig
 
 class RequestState(enum.Enum):
     WAITING = "waiting"
+    PREFILLING = "prefilling"   # admitted; prompt being prefilled in chunks
     RUNNING = "running"
     FINISHED = "finished"
 
@@ -30,6 +31,19 @@ class Request:
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
     token_times: List[float] = field(default_factory=list)
+    prompt_pos: int = 0      # next prompt index to prefill (chunked path)
+    prompt_offset: int = 0   # head tokens skipped at admission (chunked path)
+    admit_wait: int = 0      # schedule() calls spent waiting (admission aging)
+
+    def record_token(self, tok: int, now: float) -> None:
+        """Commit one sampled token into request state (single source of
+        truth for output/timing bookkeeping — engine and scheduler share it)."""
+        if not self.output:
+            self.first_token_time = now
+        self.output.append(tok)
+        self.token_times.append(now)
+        if self.should_stop():
+            self.finish_time = now
 
     @property
     def prompt_len(self) -> int:

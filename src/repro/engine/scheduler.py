@@ -1,16 +1,35 @@
 """Iteration-level continuous-batching scheduler (§4.2 step ⓪).
 
-FCFS admission into a fixed pool of batch slots, vLLM-style: finished
-sequences free their slot at iteration boundaries; waiting requests are
-admitted into free slots and prefilled together. Each iteration the
-scheduler emits a compact *scheduling output* — the analogue of the paper's
-scheduling stream on the shared-memory ring — describing which slots are
-active, which are newly admitted, and the per-slot sampling parameters.
+Admission into a fixed pool of batch slots, vLLM-style: finished sequences
+free their slot at iteration boundaries; waiting requests are admitted into
+free slots. Each iteration the scheduler emits a compact *scheduling
+output* — the analogue of the paper's scheduling stream on the shared-memory
+ring — describing which slots decode, which requests are newly admitted, and
+the chunk of prompt work due for each mid-prefill slot.
+
+Two upgrades over plain FCFS (DESIGN.md §8):
+
+* **Chunked prefill** — a prompt longer than ``prompt_chunk`` is admitted in
+  ``PREFILLING`` state and prefilled ``prompt_chunk`` tokens per iteration,
+  interleaved with the decode batch, so one long prompt can no longer stall
+  every running sequence for a full monolithic prefill (the serving analogue
+  of the paper's "sampling caps pipeline frequency" argument).
+* **Priority admission** — when slots free up, single-chunk prompts are
+  admitted before multi-chunk ones (they reach decode in one iteration),
+  FCFS within each class; a request that has waited ``max_admission_wait``
+  schedule calls is promoted to the front regardless, so long prompts
+  cannot starve.
+
+The engine commits tokens against the *snapshot* of slot assignments taken
+when the iteration was dispatched (``SchedulingOutput.slot_request``), which
+is what makes the overlapped engine's one-step commit lag safe: by the time
+a token is fetched to the host, the slot may already host a different
+request (speculative slot reuse — DESIGN.md §2).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import List, Optional
 
 import numpy as np
 
@@ -18,18 +37,38 @@ from repro.engine.request import Request, RequestState
 
 
 @dataclass
+class ChunkTask:
+    """One iteration's prefill work for one mid-prefill slot."""
+
+    slot: int
+    request: Request
+    start: int          # first prompt index of this chunk
+    end: int            # one past the last prompt index
+    final: bool         # chunk completes the prompt -> sample first token
+
+
+@dataclass
 class SchedulingOutput:
     """One iteration's plan (the paper's 'scheduling output')."""
 
     step: int
-    active_slots: np.ndarray            # (B,) bool
-    new_requests: List[Request]         # admitted this iteration (to prefill)
-    slot_request: List[Optional[Request]]  # per-slot request handle
+    active_slots: np.ndarray            # (B,) bool — slots decoding this step
+    new_requests: List[Request]         # admitted this iteration (monolithic)
+    new_chunked: List[Request]          # admitted this iteration (chunked)
+    chunks: List[ChunkTask]             # prompt chunks due this iteration
+    slot_request: List[Optional[Request]]  # per-slot request snapshot
 
 
 class Scheduler:
-    def __init__(self, num_slots: int):
+    def __init__(self, num_slots: int, prompt_chunk: int = 0,
+                 priority_admission: bool = True,
+                 max_admission_wait: int = 64,
+                 max_prompt: Optional[int] = None):
         self.num_slots = num_slots
+        self.prompt_chunk = prompt_chunk
+        self.priority_admission = priority_admission
+        self.max_admission_wait = max_admission_wait
+        self.max_prompt = max_prompt
         self.waiting: List[Request] = []
         self.slots: List[Optional[Request]] = [None] * num_slots
         self.step = 0
@@ -47,39 +86,96 @@ class Scheduler:
         return sum(s is not None for s in self.slots)
 
     # -- iteration boundary -----------------------------------------------------
-    def schedule(self) -> SchedulingOutput:
-        """Retire finished requests, admit waiting ones, emit the plan."""
-        # retire
+    def retire_finished(self) -> None:
+        """Free slots whose requests have committed their stop condition."""
         for i, req in enumerate(self.slots):
-            if req is not None and req.should_stop():
+            if req is not None and req.state is RequestState.RUNNING \
+                    and req.should_stop():
                 req.state = RequestState.FINISHED
                 self.finished.append(req)
                 self.slots[i] = None
-        # admit FCFS into free slots
+
+    def _admission_order(self) -> List[int]:
+        """Indices into ``waiting`` in admission order.
+
+        Priority classes (stable within each): (0) aged past
+        ``max_admission_wait`` — anti-starvation, (1) single-chunk prompts,
+        (2) multi-chunk prompts. Plain FCFS when chunking or priority is off.
+        """
+        if not (self.priority_admission and self.prompt_chunk > 0):
+            return list(range(len(self.waiting)))
+        return sorted(range(len(self.waiting)), key=lambda i: (
+            0 if self.waiting[i].admit_wait >= self.max_admission_wait else 1,
+            0 if self.waiting[i].prompt_len <= self.prompt_chunk else 1,
+            i))
+
+    def schedule(self) -> SchedulingOutput:
+        """Retire finished requests, admit waiting ones, emit the plan."""
+        self.retire_finished()
+        # admit into free slots in priority order
         new: List[Request] = []
-        for i in range(self.num_slots):
-            if self.slots[i] is None and self.waiting:
-                req = self.waiting.pop(0)
+        new_chunked: List[Request] = []
+        free = [i for i in range(self.num_slots) if self.slots[i] is None]
+        if free and self.waiting:
+            order = self._admission_order()
+            for rank, slot in zip(order, free):
+                req = self.waiting[rank]
+                req.slot = slot
+                self.slots[slot] = req
+                if self.prompt_chunk > 0 and \
+                        req.prompt_len > self.prompt_chunk:
+                    # head-skip overlong prompts (the monolithic path's
+                    # truncation, expressed as an offset so the caller's
+                    # prompt is never modified)
+                    req.prompt_offset = 0
+                    if self.max_prompt and req.prompt_len > self.max_prompt:
+                        req.prompt_offset = req.prompt_len - self.max_prompt
+                    req.state = RequestState.PREFILLING
+                    req.prompt_pos = req.prompt_offset
+                    new_chunked.append(req)
+                else:
+                    req.state = RequestState.RUNNING
+                    new.append(req)
+            admitted = set(order[:min(len(free), len(order))])
+            self.waiting = [r for i, r in enumerate(self.waiting)
+                            if i not in admitted]
+        for r in self.waiting:
+            r.admit_wait += 1
+        # emit one prompt chunk per mid-prefill slot
+        chunks: List[ChunkTask] = []
+        for i, req in enumerate(self.slots):
+            if req is None or req.state is not RequestState.PREFILLING:
+                continue
+            start = req.prompt_pos
+            end = min(start + self.prompt_chunk, req.prompt_len)
+            final = end == req.prompt_len
+            chunks.append(ChunkTask(slot=i, request=req, start=start,
+                                    end=end, final=final))
+            req.prompt_pos = end
+            if final:
+                # joins the decode batch this same iteration (the engine
+                # samples its first token from the final chunk's logits)
                 req.state = RequestState.RUNNING
-                req.slot = i
-                self.slots[i] = req
-                new.append(req)
-        active = np.array([s is not None for s in self.slots])
+        active = np.array([s is not None and s.state is RequestState.RUNNING
+                           for s in self.slots])
         out = SchedulingOutput(step=self.step, active_slots=active,
-                               new_requests=new, slot_request=list(self.slots))
+                               new_requests=new, new_chunked=new_chunked,
+                               chunks=chunks, slot_request=list(self.slots))
         self.step += 1
         return out
 
     # -- commit (§4.2 step ⑥) ---------------------------------------------------
-    def commit(self, tokens: np.ndarray, now: float = 0.0) -> None:
-        """Write sampled tokens back into request state."""
-        for i, req in enumerate(self.slots):
-            if req is None or req.should_stop():
+    def commit(self, tokens: np.ndarray, slot_request: List[Optional[Request]],
+               active: np.ndarray, now: float = 0.0) -> None:
+        """Write sampled tokens back into request state.
+
+        ``slot_request``/``active`` are the snapshot taken when the iteration
+        was *dispatched* — under the overlapped engine the commit lands one
+        step later, when the slot may already hold a different request.
+        Tokens for requests that had already satisfied their stop condition
+        are dropped (rollback of the speculative decode, DESIGN.md §2).
+        """
+        for i, req in enumerate(slot_request):
+            if req is None or not active[i] or req.should_stop():
                 continue
-            tok = int(tokens[i])
-            if not req.output:
-                req.first_token_time = now
-            req.output.append(tok)
-            req.token_times.append(now)
-            if req.should_stop():
-                req.finish_time = now
+            req.record_token(int(tokens[i]), now)

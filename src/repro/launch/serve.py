@@ -2,6 +2,12 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --reduced \
         --requests 16 --max-new 24
+
+Engine execution mode (DESIGN.md §2/§8):
+
+    --overlap / --no-overlap    double-buffered vs synchronous iteration loop
+    --prompt-chunk N            chunked prefill width (0 = monolithic)
+    --long-prompts              synthesize a long-prompt-heavy workload
 """
 from __future__ import annotations
 
@@ -18,7 +24,8 @@ from repro.models.model import Model
 
 
 def build_engine(arch: str, reduced: bool, algorithm: str, batch: int,
-                 max_seq: int, seed: int = 0) -> Engine:
+                 max_seq: int, seed: int = 0, overlap: bool = True,
+                 prompt_chunk: int = 0) -> Engine:
     cfg = get_arch(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -27,15 +34,20 @@ def build_engine(arch: str, reduced: bool, algorithm: str, batch: int,
     ecfg = EngineConfig(max_batch=batch, max_seq_len=max_seq,
                         algorithm=algorithm,
                         shvs=SHVSConfig(hot_size=min(1024, cfg.vocab_size // 4)),
-                        k_cap=min(256, cfg.vocab_size), seed=seed)
+                        k_cap=min(256, cfg.vocab_size), seed=seed,
+                        overlap=overlap, prompt_chunk=prompt_chunk)
     return Engine(cfg, params, ecfg)
 
 
-def synth_requests(n: int, vocab: int, max_new: int, seed: int = 0):
+def synth_requests(n: int, vocab: int, max_new: int, seed: int = 0,
+                   long_prompts: bool = False):
     rng = np.random.default_rng(seed)
     reqs = []
     for i in range(n):
-        plen = int(rng.integers(4, 24))
+        if long_prompts and i % 4 == 0:
+            plen = int(rng.integers(96, 192))
+        else:
+            plen = int(rng.integers(4, 24))
         reqs.append(Request(
             request_id=i,
             prompt=rng.integers(1, vocab, plen).tolist(),
@@ -57,28 +69,49 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--max-seq", type=int, default=256)
+    ap.add_argument("--overlap", dest="overlap", action="store_true",
+                    default=True, help="overlapped iteration loop (default)")
+    ap.add_argument("--no-overlap", dest="overlap", action="store_false",
+                    help="synchronous loop: drain every iteration")
+    ap.add_argument("--prompt-chunk", type=int, default=0,
+                    help="chunked-prefill width; 0 = monolithic prefill")
+    ap.add_argument("--long-prompts", action="store_true",
+                    help="mix in long prompts (exercises chunked prefill)")
     args = ap.parse_args()
 
     eng = build_engine(args.arch, args.reduced, args.algorithm, args.batch,
-                       args.max_seq)
-    reqs = synth_requests(args.requests, eng.cfg.vocab_size, args.max_new)
+                       args.max_seq, overlap=args.overlap,
+                       prompt_chunk=args.prompt_chunk)
+    reqs = synth_requests(args.requests, eng.cfg.vocab_size, args.max_new,
+                          long_prompts=args.long_prompts)
     eng.submit(reqs)
     t0 = time.perf_counter()
+    for r in reqs:
+        r.arrival_time = t0
     done = eng.run()
     dt = time.perf_counter() - t0
     toks = sum(len(r.output) for r in done)
+    mode = "overlapped" if args.overlap else "sequential"
+    chunk = f", prompt_chunk={args.prompt_chunk}" if args.prompt_chunk else ""
+    print(f"\nserved {len(done)} requests, {toks} tokens in {dt:.2f}s "
+          f"({toks / dt:.1f} tok/s) [{mode}{chunk}]")
     tpot = []
+    ttft = []
     for r in done:
         if len(r.token_times) > 1:
             tpot.extend(np.diff(r.token_times))
-    print(f"\nserved {len(done)} requests, {toks} tokens in {dt:.2f}s "
-          f"({toks / dt:.1f} tok/s)")
+        if r.first_token_time is not None:
+            ttft.append(r.first_token_time - r.arrival_time)
     if tpot:
         print(f"TPOT p50={np.percentile(tpot, 50) * 1e3:.1f}ms "
               f"p95={np.percentile(tpot, 95) * 1e3:.1f}ms")
+    if ttft:
+        print(f"TTFT p50={np.percentile(ttft, 50) * 1e3:.1f}ms "
+              f"p95={np.percentile(ttft, 95) * 1e3:.1f}ms")
     if eng.stats_log:
         acc = np.mean([s["accept_rate"] for s in eng.stats_log if s])
-        print(f"decision plane: mean fast-path acceptance {acc:.2%}")
+        print(f"decision plane: mean fast-path acceptance {acc:.2%} "
+              f"({len(eng.stats_log)} iterations)")
 
 
 if __name__ == "__main__":

@@ -191,6 +191,27 @@ def attend_chunked(q, k, v, *, causal: bool, window: int, chunk_q: int = 512,
     return out.astype(v.dtype)
 
 
+def attend_chunk_cached(q, cache_k, cache_v, offsets):
+    """Continue-prefill attention: C query tokens per row at per-row offsets
+    against the (already written) KV cache.
+
+    q: (B, C, nkv, g, hd); cache_k/v: (B, Sc, nkv, hd); offsets: (B,) valid
+    cache entries BEFORE this chunk. Query i of row b sits at absolute
+    position offsets[b]+i and attends to cache slots <= offsets[b]+i (its
+    own chunk prefix included — the chunk's K/V are written before this
+    runs, mirroring the decode path). No ring-buffer support: the engine
+    gates chunked prefill to full-causal archs (DESIGN.md §8).
+    """
+    B, C = q.shape[0], q.shape[1]
+    Sc = cache_k.shape[1]
+    hd = q.shape[-1]
+    scale = 1.0 / math.sqrt(hd)
+    qi = offsets[:, None, None] + jnp.arange(C)[None, :, None]
+    kj = jnp.arange(Sc)[None, None, :]
+    mask = (kj <= qi)[:, None, :, :]           # (B, 1, C, Sc)
+    return _attend_scores_softmax(q, cache_k, cache_v, mask, scale)
+
+
 def attend_decode(q, cache_k, cache_v, kv_len, *, window: int = 0,
                   ring: bool = False):
     """Single-step decode attention.
@@ -233,6 +254,10 @@ def attention_block(params, x, cfg: ModelConfig, positions, *,
     nkv = cfg.num_kv_heads
     B, Sq, _ = x.shape
     q, k, v = _project_qkv(params, x, x, cfg, positions)
+    if mode == "project":
+        # K/V (and Q) projection only — the chunked-prefill path writes the
+        # cache first, then attends against it in a second call.
+        return None, k, v
     qg = _expand_gqa(q, nkv)
     # NOTE: no sharding constraint here. An earlier revision constrained
     # (B, S, nkv, g, hd) with the model axis on nkv, which is not divisible
@@ -245,6 +270,9 @@ def attention_block(params, x, cfg: ModelConfig, positions, *,
         assert Sq == 1
         out = attend_decode(qg, cache_k, cache_v, kv_len,
                             window=window, ring=bool(window))
+    elif mode == "chunk":
+        # kv_len carries the per-row chunk offsets (entries before the chunk)
+        out = attend_chunk_cached(qg, cache_k, cache_v, kv_len)
     elif x.shape[1] >= chunk_threshold:
         out = attend_chunked(qg, k, v, causal=True, window=window)
     else:

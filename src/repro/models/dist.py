@@ -89,3 +89,19 @@ def model_spec_entry():
     if not ctx.active or ctx.model_axes is None:
         return None
     return tuple(ctx.model_axes) if len(ctx.model_axes) > 1 else ctx.model_axes[0]
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """Version-portable ``shard_map`` with replication checking disabled.
+
+    jax >= 0.6 exposes ``jax.shard_map`` (keyword ``check_vma``); older
+    releases only have ``jax.experimental.shard_map.shard_map`` (keyword
+    ``check_rep``). All call sites in this repo disable the check because
+    outputs mix per-shard and replicated values.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)

@@ -92,12 +92,12 @@ class Model:
         return x, positions, enc_out
 
     def _stack(self, params, x, positions, cache, mode, window=None,
-               remat=False, enc_out=None):
+               remat=False, enc_out=None, chunk_mask=None):
         cfg = self.cfg
         if cfg.family in _DENSE_FAMILIES:
             return apply_dense_stack(params["stack"], x, positions, cfg, cache,
                                      mode, window=window, remat=remat,
-                                     enc_out=enc_out)
+                                     enc_out=enc_out, chunk_mask=chunk_mask)
         if cfg.family == "ssm":
             return apply_rwkv_stack(params["stack"], x, positions, cfg, cache,
                                     mode, window=window, remat=remat)
@@ -140,6 +140,35 @@ class Model:
             cache["len"] = jnp.zeros_like(cache["len"]) + off + true_lens
         else:
             y_last = y[:, -1]
+        return self._logits(params, y_last), cache
+
+    def prefill_chunk(self, params, tokens, cache, counts, mask):
+        """Continue prefilling in place: write ``counts[b]`` prompt tokens
+        (right-padded to the chunk width C) for rows where ``mask[b]``,
+        starting at each row's current ``cache["len"]`` offset.
+
+        tokens: (B, C) int32; counts: (B,) int32 valid tokens per row;
+        mask: (B,) bool rows participating in this chunk. Rows outside the
+        mask are untouched: their K/V slab write is suppressed (masked
+        read-modify-write in ``_write_kv``) and their ``len`` does not
+        advance — co-resident decode rows keep their cache intact even at
+        capacity. Returns (logits at each row's last valid chunk position
+        (B, V), cache). Dense/MoE full-causal decoder archs only — the
+        engine gates eligibility (DESIGN.md §8).
+        """
+        cfg = self.cfg
+        assert cfg.family in ("dense", "moe") and not cfg.is_encdec and \
+            not cfg.sliding_window, "chunked prefill: full-causal dense only"
+        lens0 = cache["len"]
+        x, positions, _ = self._embed_inputs(params, {"tokens": tokens},
+                                             lens=lens0)
+        y, cache, _ = self._stack(params, x, positions, cache, "chunk",
+                                  chunk_mask=mask)
+        B, C = tokens.shape
+        idx = jnp.clip(counts - 1, 0, C - 1)
+        y_last = y[jnp.arange(B), idx]
+        cache = dict(cache)
+        cache["len"] = lens0 + jnp.where(mask, counts, 0).astype(lens0.dtype)
         return self._logits(params, y_last), cache
 
     def decode_step(self, params, tokens, cache, window=None):

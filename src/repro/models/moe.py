@@ -248,13 +248,12 @@ def _apply_moe_ep_scatter(params, x, cfg: ModelConfig, ep: int):
             aux = jax.lax.pmean(aux, baxes[:-1])
         return y, aux
 
-    out, aux = jax.shard_map(
+    out, aux = dist.shard_map(
         shard_fn, mesh=mesh,
         in_specs=(P(bspec, None, None), P(None, None),
                   P(mspec, None, fsdp_ax), P(mspec, None, fsdp_ax),
                   P(mspec, fsdp_ax, None)),
         out_specs=(P(bspec, None, None), P()),
-        check_vma=False,
     )(x, params["router"], params["w_gate"], params["w_up"], params["w_down"])
     return out, aux
 
@@ -293,12 +292,11 @@ def _apply_moe_ep(params, x, cfg: ModelConfig, ep: int):
             aux = jax.lax.pmean(aux, tuple(ctx.batch_axes))
         return y.reshape(b, s, d), aux
 
-    out, aux = jax.shard_map(
+    out, aux = dist.shard_map(
         shard_fn, mesh=mesh,
         in_specs=(P(bspec, None, None), P(None, None),
                   P(mspec, None, None), P(mspec, None, None),
                   P(mspec, None, None)),
         out_specs=(P(bspec, None, None), P()),
-        check_vma=False,
     )(x, params["router"], params["w_gate"], params["w_up"], params["w_down"])
     return out, aux

@@ -83,12 +83,14 @@ def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
     return cache
 
 
-def _write_kv(cache_k_l, cache_v_l, k, v, lens, mode: str):
+def _write_kv(cache_k_l, cache_v_l, k, v, lens, mode: str, mask=None):
     """Write new K/V into one layer's cache. Handles ring buffers.
 
     cache_k_l: (B, Sc, nkv, hd); k: (B, S_new, nkv, hd); lens: (B,) current
     per-sequence lengths (write positions). Prefill assumes fresh sequences
     (lens == 0 semantics; entries land at slots 0..S_new-1, ring-rotated).
+    mode "chunk": slab write at per-row offsets, gated by ``mask`` (B,) —
+    rows outside the mask keep their cache contents untouched.
     """
     Sc = cache_k_l.shape[1]
     S_new = k.shape[1]
@@ -100,6 +102,23 @@ def _write_kv(cache_k_l, cache_v_l, k, v, lens, mode: str):
 
         ck = jax.vmap(upd)(cache_k_l, k, slot)
         cv = jax.vmap(upd)(cache_v_l, v, slot)
+        return ck, cv
+    if mode == "chunk":
+        # C-wide slab at each row's offset, but ONLY for rows in the chunk
+        # mask: the (B, C) program computes garbage K/V for co-resident
+        # decode rows, and an unmasked slab write would clobber their valid
+        # entries once lens[b] > Sc - C (dynamic_update_slice clamps the
+        # start). Masked rows keep their slab via read-modify-write.
+        mask = lens >= 0 if mask is None else mask
+        slot = jnp.minimum(lens, Sc - S_new).astype(jnp.int32)
+
+        def upd_masked(c, x, s, m):
+            cur = jax.lax.dynamic_slice(c, (s, 0, 0), x.shape)
+            return jax.lax.dynamic_update_slice(
+                c, jnp.where(m, x, cur), (s, 0, 0))
+
+        ck = jax.vmap(upd_masked)(cache_k_l, k, slot, mask)
+        cv = jax.vmap(upd_masked)(cache_v_l, v, slot, mask)
         return ck, cv
     # prefill (fresh rows): keep the last Sc entries, rotated into ring order
     if S_new >= Sc:
@@ -137,7 +156,7 @@ def init_dense_stack(key, cfg: ModelConfig):
 
 def apply_dense_stack(params, x, positions, cfg: ModelConfig, cache, mode: str,
                       window: Optional[int] = None, remat: bool = False,
-                      enc_out=None):
+                      enc_out=None, chunk_mask=None):
     """x: (B, S, d). Returns (y, cache, aux_loss).
 
     For encoder-decoder models (whisper): pass ``enc_out`` in train/prefill
@@ -170,6 +189,17 @@ def apply_dense_stack(params, x, positions, cfg: ModelConfig, cache, mode: str,
                 attn_out, _, _ = attention_block(
                     lp["attn"], h, cfg, positions, cache_k=ck, cache_v=cv,
                     kv_len=kv_len, mode="decode", window=win)
+            elif mode == "chunk":
+                # chunked continue-prefill: write the chunk's K/V slab at
+                # each row's current offset, then attend against the cache
+                # with per-row causal masks (DESIGN.md §8)
+                _, k, v = attention_block(lp["attn"], h, cfg, positions,
+                                          mode="project", window=win)
+                ck, cv = _write_kv(ck_in, cv_in, k, v, lens0, "chunk",
+                                   chunk_mask)
+                attn_out, _, _ = attention_block(
+                    lp["attn"], h, cfg, positions, cache_k=ck, cache_v=cv,
+                    kv_len=lens0, mode="chunk", window=win)
             else:  # prefill
                 attn_out, k, v = attention_block(lp["attn"], h, cfg, positions,
                                                  mode="train", window=win)

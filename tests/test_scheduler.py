@@ -1,0 +1,156 @@
+"""Scheduler unit tests: chunked prefill accounting, priority admission,
+decode starvation, and snapshot-commit semantics (DESIGN.md §2/§8).
+Pure host-side — no model, no device programs."""
+import numpy as np
+import pytest
+
+from repro.config import SamplingConfig
+from repro.engine.request import Request, RequestState
+from repro.engine.scheduler import Scheduler
+
+
+def _req(rid, plen, max_new=4):
+    return Request(request_id=rid, prompt=list(range(1, plen + 1)),
+                   max_new_tokens=max_new, sampling=SamplingConfig())
+
+
+def test_chunk_accounting_partitions_prompt():
+    """Emitted chunks exactly tile [0, prompt_len) in order, each at most
+    prompt_chunk wide, with `final` on the last chunk only."""
+    sch = Scheduler(2, prompt_chunk=16)
+    req = _req(0, plen=70)
+    sch.submit(req)
+    spans = []
+    for _ in range(10):
+        out = sch.schedule()
+        for c in out.chunks:
+            assert c.request is req and c.slot == req.slot
+            spans.append((c.start, c.end, c.final))
+        if req.state is RequestState.RUNNING:
+            break
+    starts = [s for s, _, _ in spans]
+    ends = [e for _, e, _ in spans]
+    assert starts == [0, 16, 32, 48, 64]
+    assert ends == [16, 32, 48, 64, 70]
+    assert [f for _, _, f in spans] == [False, False, False, False, True]
+    assert req.prompt_pos == 70
+
+
+def test_short_prompt_skips_chunking():
+    sch = Scheduler(2, prompt_chunk=16)
+    req = _req(0, plen=16)       # == chunk width -> monolithic
+    sch.submit(req)
+    out = sch.schedule()
+    assert out.new_requests == [req] and not out.new_chunked
+    assert req.state is RequestState.RUNNING
+
+
+def test_no_decode_starvation_during_chunked_prefill():
+    """Running sequences stay in the active decode set on every iteration
+    while another slot prefills a long prompt chunk by chunk."""
+    sch = Scheduler(3, prompt_chunk=8)
+    residents = [_req(0, 4, max_new=100), _req(1, 4, max_new=100)]
+    for r in residents:
+        sch.submit(r)
+        r.state = RequestState.RUNNING
+    sch.schedule()
+    long_req = _req(2, plen=64)
+    sch.submit(long_req)
+    saw_chunks = 0
+    while long_req.state is RequestState.PREFILLING or saw_chunks == 0:
+        out = sch.schedule()
+        saw_chunks += len(out.chunks)
+        for r in residents:
+            assert out.active_slots[r.slot], \
+                "resident decode starved by chunked prefill"
+        assert not out.active_slots[long_req.slot] or \
+            long_req.state is RequestState.RUNNING
+        if saw_chunks > 20:
+            break
+    assert saw_chunks == 64 // 8
+
+
+def test_priority_admission_prefers_single_chunk_prompts():
+    sch = Scheduler(1, prompt_chunk=8)
+    long_req, short_req = _req(0, plen=40), _req(1, plen=4)
+    sch.submit(long_req)
+    sch.submit(short_req)
+    out = sch.schedule()
+    assert out.new_requests == [short_req]
+    assert long_req.state is RequestState.WAITING
+
+
+def test_fcfs_when_priority_disabled():
+    sch = Scheduler(1, prompt_chunk=8, priority_admission=False)
+    long_req, short_req = _req(0, plen=40), _req(1, plen=4)
+    sch.submit(long_req)
+    sch.submit(short_req)
+    out = sch.schedule()
+    assert out.new_chunked == [long_req]
+    assert short_req.state is RequestState.WAITING
+
+
+def test_admission_aging_prevents_starvation():
+    """A long prompt that has waited past max_admission_wait is admitted
+    ahead of younger single-chunk prompts."""
+    sch = Scheduler(1, prompt_chunk=8, max_admission_wait=3)
+    long_req = _req(0, plen=40)
+    sch.submit(long_req)
+    # slot occupied by a resident, long request ages in the queue
+    resident = _req(99, 4, max_new=1)
+    sch.submit(resident)
+    out = sch.schedule()
+    assert out.new_requests == [resident]
+    for _ in range(4):
+        sch.schedule()               # long_req.admit_wait grows
+    resident.output.append(1)        # satisfies stop -> slot frees
+    sch.submit(_req(1, plen=4))      # younger short prompt
+    out = sch.schedule()
+    assert out.new_chunked == [long_req], \
+        "aged long prompt should beat younger short prompt"
+
+
+def test_commit_uses_dispatch_snapshot():
+    """Tokens commit against the slot->request snapshot taken at dispatch,
+    and tokens for already-stopped requests are dropped (the overlapped
+    engine's speculative-decode rollback)."""
+    sch = Scheduler(2)
+    a, b = _req(0, 4, max_new=2), _req(1, 4, max_new=8)
+    sch.submit(a)
+    sch.submit(b)
+    out = sch.schedule()
+    snapshot = out.slot_request
+    active = out.active_slots
+    sch.commit(np.array([11, 21]), snapshot, active, now=1.0)
+    sch.commit(np.array([12, 22]), snapshot, active, now=2.0)
+    assert a.output == [11, 12] and a.finish_time == 2.0
+    # a reached max_new: a speculative third token must be rolled back,
+    # even after the slot has been handed to a new request
+    sch.schedule()                   # retires a
+    c = _req(2, 4)
+    sch.submit(c)
+    sch.schedule()                   # c takes a's old slot
+    sch.commit(np.array([13, 23]), snapshot, active, now=3.0)
+    assert a.output == [11, 12], "speculative token not rolled back"
+    assert c.output == [], "stale token leaked into the slot's new request"
+    assert b.output == [21, 22, 23]
+
+
+def test_max_prompt_head_skip_on_chunked_admission():
+    """Overlong chunked prompts are head-skipped via an offset; the
+    caller's prompt list is never modified, and emitted chunks cover
+    exactly the last max_prompt tokens."""
+    sch = Scheduler(1, prompt_chunk=8, max_prompt=32)
+    req = _req(0, plen=50)
+    original = list(req.prompt)
+    sch.submit(req)
+    spans = []
+    for _ in range(10):
+        out = sch.schedule()
+        spans.extend((c.start, c.end) for c in out.chunks)
+        if req.state is RequestState.RUNNING:
+            break
+    assert req.prompt == original, "prompt mutated by admission"
+    assert req.prompt_offset == 50 - 32
+    assert spans[0][0] == 18 and spans[-1][1] == 50
+    assert sum(e - s for s, e in spans) == 32
