@@ -22,6 +22,8 @@ MODULES = [
     ("fig6", "benchmarks.fig6_load_latency", "Fig 6: load-latency"),
     ("overlap", "benchmarks.fig_overlap",
      "Overlapped engine + chunked prefill"),
+    ("paged", "benchmarks.fig_paged",
+     "Paged KV: admitted batch + throughput vs contiguous"),
     ("fig10", "benchmarks.fig10_ablation", "Fig 10: ablation ladder"),
     ("fig11", "benchmarks.fig11_sizing", "Fig 11/12: sizing model"),
     ("fig13", "benchmarks.fig13_tvd", "Fig 13: TVD exactness"),

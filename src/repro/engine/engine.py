@@ -29,6 +29,15 @@ placement and admission timing. Exception: the beyond-paper ``gumbel``
 algorithm seeds its fast path on the global iteration index, so it is
 reproducible run-to-run but excluded from the cross-mode identity contract.
 
+**Paged KV mode** (``cache="paged"``, DESIGN.md §9). The per-slot slab
+cache is replaced by a vLLM-style block pool: the scheduler admits by free
+blocks (``ceil((prompt+max_new)/block_size)``), allocation is lazy as
+sequences grow, and pool exhaustion preempts the most recently admitted
+request (blocks freed, re-queued at the front, recompute-on-resume).
+Decode and chunked prefill run the same jitted programs over gathered
+block views, so token streams stay bit-identical to the contiguous cache
+in every overlap/prefill mode (tests/test_paged_engine.py).
+
 The engine is deliberately token-only (dense/moe/ssm/hybrid archs); the
 multimodal frontends are exercised by the dry-run and smoke tests.
 """
@@ -46,8 +55,11 @@ from repro.config import ModelConfig, SamplingConfig, SHVSConfig
 from repro.core.decision_plane import DecisionPlane
 from repro.core.sampling import SamplingParams
 from repro.core import penalties as pen
+from repro.engine.paged_cache import (BlockAllocator, PagedCacheConfig,
+                                      init_paged_cache)
 from repro.engine.request import Request, RequestState
 from repro.engine.scheduler import ChunkTask, Scheduler
+from repro.models.attention import flat_block_indices, scatter_block_kv
 from repro.models.model import Model
 
 
@@ -65,6 +77,10 @@ class EngineConfig:
     prompt_chunk: int = 0            # >0: chunked prefill width (§8)
     priority_admission: bool = True  # single-chunk prompts admitted first
     max_admission_wait: int = 64     # aging bound for priority admission
+    cache: str = "contiguous"        # KV layout: "contiguous" | "paged" (§9)
+    block_size: int = 16             # paged: tokens per KV block
+    num_blocks: int = 0              # paged pool size; 0 = memory-equal to
+    #                                  the contiguous cache (B * S / bs)
 
 
 def _bucket(n: int, mult: int) -> int:
@@ -109,19 +125,47 @@ class Engine:
         assert chunk <= engine_cfg.max_seq_len // 2, (
             f"prompt_chunk={chunk} must be <= max_seq_len//2 "
             f"({engine_cfg.max_seq_len // 2})")
+        # paged KV mode (§9): block-pool cache + block-based admission;
+        # gated to the same full-causal dense archs as chunked prefill
+        # (the gathered block view reuses the cached-attention masks)
+        self._paged = engine_cfg.cache == "paged"
+        assert engine_cfg.cache in ("contiguous", "paged"), engine_cfg.cache
+        B, S = engine_cfg.max_batch, engine_cfg.max_seq_len
+        kv_gate = on_free = None
+        if self._paged:
+            assert (model_cfg.family in ("dense", "moe")
+                    and not model_cfg.is_encdec
+                    and not model_cfg.sliding_window), \
+                "cache='paged': full-causal dense/moe decoders only"
+            bs = engine_cfg.block_size
+            assert S % bs == 0, (
+                f"max_seq_len={S} must be a multiple of block_size={bs} so "
+                "the gathered block view is shaped exactly like the "
+                "contiguous cache (bit-identity, DESIGN.md §9)")
+            mb = S // bs
+            self.pcfg = PagedCacheConfig(
+                block_size=bs,
+                num_blocks=engine_cfg.num_blocks or B * mb,
+                max_blocks_per_seq=mb)
+            self.alloc = BlockAllocator(self.pcfg, B)
+            # host mirror of each slot's dispatch-time cache length (device
+            # `len` is a future under the overlapped loop)
+            self._slot_len = np.zeros((B,), np.int64)
+            kv_gate, on_free = self._kv_gate, self._on_slot_free
         self.scheduler = Scheduler(
             engine_cfg.max_batch, prompt_chunk=chunk,
             priority_admission=engine_cfg.priority_admission,
             max_admission_wait=engine_cfg.max_admission_wait,
-            max_prompt=max(chunk, engine_cfg.max_seq_len - chunk))
+            max_prompt=max(chunk, engine_cfg.max_seq_len - chunk),
+            kv_gate=kv_gate, on_free=on_free)
         self.decision = DecisionPlane(
             model_cfg.vocab_size, algorithm=engine_cfg.algorithm,
             shvs=engine_cfg.shvs, hot_set=hot_set,
             sampling_parallelism=engine_cfg.sampling_parallelism,
             k_cap=min(engine_cfg.k_cap, model_cfg.vocab_size),
             seed=engine_cfg.seed)
-        B, S = engine_cfg.max_batch, engine_cfg.max_seq_len
-        self.cache = self.model.init_cache(B, S)
+        self.cache = (init_paged_cache(model_cfg, B, self.pcfg)
+                      if self._paged else self.model.init_cache(B, S))
         self.pstate = self.decision.init_state(B)
         self.last_tokens = jnp.zeros((B,), jnp.int32)
         self._sp = _SamplingParamStore(B)
@@ -190,8 +234,136 @@ class Engine:
         last_tokens = jnp.where(finish, tokens, last_tokens)
         return tokens, last_tokens, cache, pstate
 
+    # -- paged KV bookkeeping (§9) ---------------------------------------------
+    def _blocks_for(self, req: Request) -> int:
+        """Worst-case block demand of a request — the admission unit.
+        Invariant across preemption/resume: prompt+output+remaining always
+        sums to prompt_len + max_new_tokens."""
+        total = min(req.prompt_len + req.max_new_tokens,
+                    self.ecfg.max_seq_len)
+        return self.alloc.blocks_needed(total)
+
+    def _kv_gate(self, req: Request, round_admits: List[Request]) -> bool:
+        """Block-based admission: a request enters only when its worst-case
+        ceil((prompt+max_new)/block_size) blocks are free, net of the
+        worst-case demand of requests admitted earlier this round."""
+        reserved = sum(self._blocks_for(r) for r in round_admits)
+        return self._blocks_for(req) <= self.alloc.num_free - reserved
+
+    def _on_slot_free(self, slot: int, req: Request) -> None:
+        self.alloc.release(slot)
+        self._slot_len[slot] = 0
+
+    def _push_block_table(self) -> None:
+        """Upload the host allocator's block table to the device cache."""
+        cache = dict(self.cache)
+        cache["block_table"] = jnp.asarray(
+            self.alloc.table(self.ecfg.max_batch))
+        self.cache = cache
+
+    def _pick_victim(self) -> Optional[Request]:
+        """Preemption victim: the lowest-priority slotted request = the most
+        recently admitted (ties broken by slot for determinism)."""
+        cands = [r for r in self.scheduler.slots if r is not None and
+                 r.state in (RequestState.RUNNING, RequestState.PREFILLING)]
+        if len(cands) <= 1:
+            return None
+        return max(cands, key=lambda r: (r.admit_step, r.slot))
+
+    def _ensure_blocks(self, slot: int, target_len: int,
+                       plan: Optional["SchedulingOutput"] = None) -> bool:
+        """Grow ``slot``'s allocation to cover ``target_len`` tokens,
+        preempting under pool pressure. Returns False iff the slot's own
+        request was the preemption victim (it frees itself and skips this
+        iteration). Replaces the old hard ``RuntimeError`` on exhaustion."""
+        if self.alloc.blocks_needed(target_len) > \
+                self.pcfg.max_blocks_per_seq:
+            # per-sequence capacity, not pool pressure: preemption can't help
+            raise RuntimeError(
+                f"sequence of {target_len} tokens exceeds cache capacity "
+                f"({self.pcfg.max_blocks_per_seq} blocks per sequence)")
+        owner = self.scheduler.slots[slot]
+        while True:
+            try:
+                self.alloc.ensure(slot, target_len)
+                return True
+            except RuntimeError:
+                pass
+            # commit in-flight iterations and retire what finished — their
+            # released blocks may already cover the demand
+            self.flush()
+            if self.scheduler.slots[slot] is not owner:
+                # the flush retired this very row: don't claim blocks for
+                # an empty slot — the caller recomputes activity
+                return False
+            try:
+                self.alloc.ensure(slot, target_len)
+                return True
+            except RuntimeError:
+                pass
+            victim = self._pick_victim()
+            if victim is None:
+                raise RuntimeError(
+                    "paged KV pool cannot hold a single sequence "
+                    f"(need {self.alloc.blocks_needed(target_len)} blocks, "
+                    f"pool={self.pcfg.num_blocks})")
+            vslot = victim.slot
+            self.scheduler.preempt(victim)
+            if plan is not None:
+                plan.active_slots[vslot] = False
+                plan.slot_request[vslot] = None
+            if vslot == slot:
+                return False
+
+    def _decode_activity(self) -> np.ndarray:
+        return np.array(
+            [s is not None and s.state is RequestState.RUNNING
+             and not s.should_stop() for s in self.scheduler.slots])
+
+    def _prepare_paged_decode(self, plan) -> np.ndarray:
+        """Ensure every decoding row has a block for its next token; on
+        exhaustion, preempt lowest-priority requests (recompute-on-resume).
+        Returns the refreshed activity mask (a fixed point: ensuring one
+        row may evict another already-checked one, so loop until stable).
+
+        A row whose next token would exceed the per-sequence cache capacity
+        is stopped (``Request.truncated``) instead of crashing the engine:
+        requests with prompt+max_new > max_seq_len are admitted (the gate
+        clamps their block demand) and simply finish at capacity."""
+        while True:
+            active = self._decode_activity()
+            aborted = False
+            for b in np.flatnonzero(active):
+                s = self.scheduler.slots[b]
+                if s is None or s.state is not RequestState.RUNNING:
+                    aborted = True      # evicted mid-sweep
+                    break
+                if int(self._slot_len[b]) + 1 > self.ecfg.max_seq_len:
+                    s.truncated = True  # capacity stop, not pool pressure
+                    aborted = True
+                    break
+                if not self._ensure_blocks(
+                        int(b), int(self._slot_len[b]) + 1, plan):
+                    aborted = True      # a row was evicted mid-sweep
+                    break
+            if not aborted and np.array_equal(self._decode_activity(),
+                                              active):
+                return active
+
     # -- public API --------------------------------------------------------------
     def submit(self, requests: List[Request]) -> None:
+        if self._paged:
+            # validate the whole batch before enqueueing any of it: the
+            # admission gate would skip an oversized request on every round
+            # (silent starvation) — the pool can never cover its worst
+            # case, even completely drained
+            for r in requests:
+                if self._blocks_for(r) > self.pcfg.num_blocks:
+                    raise ValueError(
+                        f"request {r.request_id} needs {self._blocks_for(r)} "
+                        f"KV blocks (prompt {r.prompt_len} + max_new "
+                        f"{r.max_new_tokens}) > pool of "
+                        f"{self.pcfg.num_blocks}")
         for r in requests:
             self.scheduler.submit(r)
 
@@ -221,6 +393,11 @@ class Engine:
         plan.active_slots = np.array(
             [s is not None and s.state is RequestState.RUNNING
              and not s.should_stop() for s in self.scheduler.slots])
+        if self._paged and plan.active_slots.any():
+            # grow each decoding row's allocation by one token (preempting
+            # under pressure) and publish the refreshed block table
+            plan.active_slots = self._prepare_paged_decode(plan)
+            self._push_block_table()
         dispatched = bool(plan.active_slots.any())
         if dispatched:
             active = jnp.asarray(plan.active_slots)
@@ -235,6 +412,8 @@ class Engine:
                 jnp.asarray(plan.step, jnp.int32), active)
             self.last_tokens = tokens
             self._pos += plan.active_slots
+            if self._paged:
+                self._slot_len += plan.active_slots
             self._pending.append(_Pending(
                 kind="decode", tokens=tokens, step=plan.step, stats=stats,
                 active=plan.active_slots.copy(),
@@ -292,17 +471,26 @@ class Engine:
 
     # -- admission ------------------------------------------------------------
     def _admit(self, new_requests: List[Request]) -> None:
-        """Prefill new requests (padded batch) and insert rows into state."""
+        """Prefill new requests (padded batch) and insert rows into state.
+
+        A *resumed* request (re-queued by preemption with committed output,
+        §9) re-prefills prompt+output and samples its next token at output
+        position len(output) — the (request, position) RNG keying makes the
+        continuation bit-identical to the unpreempted stream."""
         P = len(new_requests)
-        maxlen = max(r.prompt_len for r in new_requests)
+        ctxs = [r.context_tokens() if r.output else r.prompt
+                for r in new_requests]
+        maxlen = max(len(c) for c in ctxs)
         Sp = _bucket(maxlen, self.ecfg.prompt_bucket)
         Sp = min(Sp, self.ecfg.max_seq_len)
         toks = np.zeros((P, Sp), np.int32)
         lens = np.zeros((P,), np.int32)
-        for i, r in enumerate(new_requests):
-            p = r.prompt[-Sp:]
-            toks[i, :len(p)] = p
-            lens[i] = len(p)
+        bases = np.zeros((P,), np.int32)   # next output position per row
+        for i, (r, c) in enumerate(zip(new_requests, ctxs)):
+            c = c[-Sp:]
+            toks[i, :len(c)] = c
+            lens[i] = len(c)
+            bases[i] = len(r.output)
         key = (P, Sp)
         if key not in self._prefill_cache:
             self._prefill_cache[key] = jax.jit(self._prefill_impl)
@@ -310,17 +498,34 @@ class Engine:
             self.params, jnp.asarray(toks), jnp.asarray(lens))
         slots = jnp.asarray([r.slot for r in new_requests], jnp.int32)
         rids = np.array([r.request_id for r in new_requests], np.uint32)
-        # first sampled token (position 0) for the new rows
+        # resumed rows: the prefill batched prompt+output into one sequence,
+        # but the penalty state must keep the prompt/output split (presence/
+        # frequency penalties read C_o) — rebuild their histograms
+        V = self.cfg.vocab_size
+        for i, r in enumerate(new_requests):
+            if not r.output:
+                continue
+            pp = jnp.asarray(np.asarray(r.prompt, np.int32)[None, :])
+            oo = jnp.asarray(np.asarray(r.output, np.int32)[None, :])
+            rows_pstate = pen.PenaltyState(
+                prompt_counts=rows_pstate.prompt_counts.at[i].set(
+                    pen.histogram(pp, V)[0]),
+                output_counts=rows_pstate.output_counts.at[i].set(
+                    pen.histogram(oo, V)[0]))
+        # first sampled token (output position `bases`, 0 for fresh rows)
         sp_rows = _SamplingParamStore(P)
         for i, r in enumerate(new_requests):
             sp_rows.set_row(i, r.sampling)
         first, rows_pstate, _ = self.decision.step(
             logits, rows_pstate, sp_rows.as_params(),
             jnp.asarray(self.scheduler.step, jnp.int32),
-            rng_tags=(jnp.asarray(rids), jnp.zeros((P,), jnp.int32)))
+            rng_tags=(jnp.asarray(rids), jnp.asarray(bases)))
         # insert rows into batch state (device-side, chains off any
         # still-running decode through the donated cache/pstate futures)
-        self.cache = _insert_rows(self.cache, rows_cache, slots)
+        if self._paged:
+            self._paged_insert(new_requests, rows_cache, lens)
+        else:
+            self.cache = _insert_rows(self.cache, rows_cache, slots)
         self.pstate = pen.PenaltyState(
             prompt_counts=self.pstate.prompt_counts.at[slots].set(
                 rows_pstate.prompt_counts),
@@ -333,8 +538,42 @@ class Engine:
         for i, r in enumerate(new_requests):
             self._sp.set_row(r.slot, r.sampling)
             self._nonce[r.slot] = rids[i]
-            self._pos[r.slot] = 1
+            self._pos[r.slot] = int(bases[i]) + 1
             r.record_token(int(first_np[i]), now)
+
+    def _paged_insert(self, new_requests: List[Request], rows_cache,
+                      lens: np.ndarray) -> None:
+        """Scatter freshly prefilled contiguous rows into the block pool:
+        allocate each slot's blocks, publish the table, then one jitted
+        scatter moves the rows' valid K/V entries to their physical blocks."""
+        for i, r in enumerate(new_requests):
+            self.alloc.release(r.slot)         # stale claims (defensive)
+            self.alloc.ensure(r.slot, int(lens[i]))
+            self._slot_len[r.slot] = int(lens[i])
+        self._push_block_table()
+        P = len(new_requests)
+        key = ("paged_insert", P)
+        if key not in self._prefill_cache:
+            self._prefill_cache[key] = jax.jit(self._paged_insert_impl)
+        slot_ids = np.asarray([r.slot for r in new_requests], np.int32)
+        row_bt = self.alloc.table(self.ecfg.max_batch)[slot_ids]
+        self.cache = self._prefill_cache[key](
+            self.cache, rows_cache["k"], rows_cache["v"],
+            jnp.asarray(row_bt), jnp.asarray(slot_ids), jnp.asarray(lens))
+
+    def _paged_insert_impl(self, cache, rows_k, rows_v, row_bt, slot_ids,
+                           true_lens):
+        """rows_k/v: (L, P, Sc, kv, hd) contiguous prefill rows; write the
+        first true_lens[p] entries of row p into its slot's blocks."""
+        Sc = rows_k.shape[2]
+        valid = jnp.arange(Sc)[None, :] < true_lens[:, None]
+        flat = flat_block_indices(row_bt, jnp.zeros_like(true_lens), valid,
+                                  self.pcfg.block_size, self.pcfg.num_blocks)
+        cache = dict(cache)
+        cache["k_pool"] = scatter_block_kv(cache["k_pool"], rows_k, flat)
+        cache["v_pool"] = scatter_block_kv(cache["v_pool"], rows_v, flat)
+        cache["len"] = cache["len"].at[slot_ids].set(true_lens)
+        return cache
 
     def _admit_chunked(self, new_chunked: List[Request]) -> None:
         """Claim slots for chunked-prefill requests: reset the rows' cache
@@ -365,11 +604,31 @@ class Engine:
             self._sp.set_row(r.slot, r.sampling)
             self._nonce[r.slot] = np.uint32(r.request_id)
             self._pos[r.slot] = 0
+            if self._paged:
+                self.alloc.release(r.slot)     # stale claims (defensive)
+                self._slot_len[r.slot] = 0
 
     def _run_chunks(self, chunks: List[ChunkTask]) -> None:
         """Run one prompt chunk per mid-prefill slot (single (B, C) program);
         rows that complete their prompt sample their first token and join
         the decode batch this iteration."""
+        if self._paged:
+            # grow each chunk row's allocation to cover its slab before
+            # dispatch; a task whose request was evicted during another
+            # task's recovery (or its own) is dropped — re-admission
+            # restarts its prefill from scratch
+            kept: List[ChunkTask] = []
+            for task in chunks:
+                if self.scheduler.slots[task.slot] is not task.request:
+                    continue
+                need = int(self._slot_len[task.slot]) + task.end - task.start
+                if self._ensure_blocks(task.slot, need):
+                    kept.append(task)
+            chunks = [t for t in kept
+                      if self.scheduler.slots[t.slot] is t.request]
+            if not chunks:
+                return
+            self._push_block_table()
         B = self.ecfg.max_batch
         C = self.scheduler.prompt_chunk
         toks = np.zeros((B, C), np.int32)
@@ -390,6 +649,9 @@ class Engine:
             jnp.asarray(counts), jnp.asarray(mask), jnp.asarray(finish),
             self._sp.as_params(), jnp.asarray(self._nonce.copy()),
             self.last_tokens, jnp.asarray(self.scheduler.step, jnp.int32))
+        if self._paged:
+            for task in chunks:
+                self._slot_len[task.slot] += task.end - task.start
         for slot, _ in finishers:
             self._pos[slot] = 1
         if finishers:

@@ -2,30 +2,36 @@
 
 The paper's host stack is vLLM (PagedAttention); the contiguous per-slot
 cache in ``models/transformer.py`` wastes memory when sequence lengths are
-skewed. This module provides the paged alternative for the serving engine:
+skewed. This module provides the paged alternative for the serving engine
+(DESIGN.md §9):
 
 * a global block pool  ``(L, num_blocks, block_size, kv, hd)`` per K and V;
 * a per-slot block table ``(B, max_blocks_per_seq)`` of pool indices
   (-1 = unallocated), managed functionally on device with a host-side
   free-list mirror in :class:`BlockAllocator`;
-* ``paged_write`` (one token per active slot) and ``paged_gather``
-  (materialize a contiguous (B, S_view, kv, hd) view for attention —
-  decode-shaped S_view = blocks·block_size with validity masking).
+* ``paged_write`` (a chunk of up to C tokens per active slot) and
+  ``paged_gather`` (materialize a contiguous (B, S_view, kv, hd) view for
+  attention — decode-shaped S_view = blocks·block_size with validity
+  masking).
 
-Numerics match the contiguous cache exactly (tests/test_paged_cache.py):
-pages only change WHERE K/V live, never their values, so attention over the
-gathered view with the same length mask is identical.
+The device-side primitives (gather / flat-index / scatter) live in
+``models/attention.py`` so the transformer stack can attend over the pool
+without importing the engine package; this module composes them with the
+host-side allocator. Numerics match the contiguous cache exactly
+(tests/test_paged_cache.py): pages only change WHERE K/V live, never their
+values, so attention over the gathered view with the same length mask is
+identical.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig
+from repro.models.attention import flat_block_indices, scatter_block_kv
 
 
 @dataclass
@@ -54,7 +60,12 @@ def init_paged_cache(cfg: ModelConfig, batch: int, pcfg: PagedCacheConfig,
 
 
 class BlockAllocator:
-    """Host-side free-list that mirrors the device block table."""
+    """Host-side free-list that mirrors the device block table.
+
+    ``ensure`` is atomic: it either grows a slot's allocation to the
+    requested coverage or raises without mutating any state, so exhaustion
+    is reported deterministically (tests/test_property.py).
+    """
 
     def __init__(self, pcfg: PagedCacheConfig, batch: int):
         self.pcfg = pcfg
@@ -64,17 +75,28 @@ class BlockAllocator:
     def blocks_needed(self, length: int) -> int:
         return -(-max(length, 0) // self.pcfg.block_size)
 
+    @property
+    def num_free(self) -> int:
+        return len(self.free)
+
+    @property
+    def num_live(self) -> int:
+        return sum(len(b) for b in self.owned)
+
     def ensure(self, slot: int, new_length: int) -> List[int]:
         """Grow slot's allocation to cover new_length; returns newly
-        assigned block ids (raises if the pool is exhausted)."""
+        assigned block ids. Raises (without allocating anything) if the
+        pool cannot cover the request."""
         need = self.blocks_needed(new_length)
-        fresh = []
-        while len(self.owned[slot]) < need:
-            if not self.free:
-                raise RuntimeError("paged KV pool exhausted")
-            b = self.free.pop()
-            self.owned[slot].append(b)
-            fresh.append(b)
+        if need > self.pcfg.max_blocks_per_seq:
+            raise RuntimeError(
+                f"sequence needs {need} blocks > max_blocks_per_seq="
+                f"{self.pcfg.max_blocks_per_seq}")
+        grow = need - len(self.owned[slot])
+        if grow > len(self.free):
+            raise RuntimeError("paged KV pool exhausted")
+        fresh = [self.free.pop() for _ in range(grow)]
+        self.owned[slot].extend(fresh)
         return fresh
 
     def release(self, slot: int) -> None:
@@ -90,40 +112,30 @@ class BlockAllocator:
 
 def paged_write(cache: dict, layer_kv: Tuple[jnp.ndarray, jnp.ndarray],
                 lens: jnp.ndarray, pcfg: PagedCacheConfig,
-                active: Optional[jnp.ndarray] = None) -> dict:
-    """Write one token per slot into the pools at position ``lens``.
+                active: Optional[jnp.ndarray] = None,
+                counts: Optional[jnp.ndarray] = None) -> dict:
+    """Write a chunk of tokens per slot into the pools at position ``lens``.
 
-    layer_kv: (k, v) each (L, B, 1, kv, hd) — all layers' new entries.
-    The block table must already cover position lens (BlockAllocator.ensure).
+    layer_kv: (k, v) each (L, B, C, kv, hd) — all layers' new entries
+    (C = 1 is the decode case). ``counts`` (B,) limits the valid tokens per
+    row (defaults to C); ``active`` (B,) bool zeroes a row's count
+    entirely. The block table must already cover positions
+    [lens, lens+counts) (``BlockAllocator.ensure``); writes landing on an
+    unallocated or out-of-range block are dropped.
     """
     k_new, v_new = layer_kv
-    L, B = k_new.shape[0], k_new.shape[1]
-    bs = pcfg.block_size
-    blk_idx = lens // bs                       # (B,) table column
-    blk_off = lens % bs                        # (B,) offset inside block
-    pool_idx = jnp.take_along_axis(cache["block_table"], blk_idx[:, None],
-                                   axis=1)[:, 0]                   # (B,)
-    ok = pool_idx >= 0
+    B, C = k_new.shape[1], k_new.shape[2]
+    if counts is None:
+        counts = jnp.full((B,), C, jnp.int32)
     if active is not None:
-        ok = ok & active
-    safe_pool = jnp.where(ok, pool_idx, 0)
-
-    def write(pool, new):
-        # pool: (L, NB, bs, kv, hd); new: (L, B, 1, kv, hd)
-        for b in range(B):        # B is small in serving; unrolled scatter
-            cur = jax.lax.dynamic_slice(
-                pool, (0, safe_pool[b], blk_off[b], 0, 0),
-                (L, 1, 1) + pool.shape[3:])
-            val = jnp.where(ok[b], new[:, b].reshape(cur.shape), cur)
-            pool = jax.lax.dynamic_update_slice(
-                pool, val, (0, safe_pool[b], blk_off[b], 0, 0))
-        return pool
-
+        counts = jnp.where(active, counts, 0)
+    valid = jnp.arange(C)[None, :] < counts[:, None]
+    flat = flat_block_indices(cache["block_table"], lens, valid,
+                              pcfg.block_size, pcfg.num_blocks)
     cache = dict(cache)
-    cache["k_pool"] = write(cache["k_pool"], k_new)
-    cache["v_pool"] = write(cache["v_pool"], v_new)
-    cache["len"] = cache["len"] + (active.astype(jnp.int32)
-                                   if active is not None else 1)
+    cache["k_pool"] = scatter_block_kv(cache["k_pool"], k_new, flat)
+    cache["v_pool"] = scatter_block_kv(cache["v_pool"], v_new, flat)
+    cache["len"] = cache["len"] + counts.astype(jnp.int32)
     return cache
 
 
@@ -131,13 +143,11 @@ def paged_gather(cache: dict, pcfg: PagedCacheConfig):
     """Materialize contiguous (L, B, S_view, kv, hd) K/V views plus the
     validity length vector; S_view = max_blocks_per_seq * block_size."""
     bt = cache["block_table"]                  # (B, MB)
-    B, MB = bt.shape
-    safe = jnp.maximum(bt, 0)
 
     def gather(pool):
-        # pool: (L, NB, bs, kv, hd) -> (L, B, MB*bs, kv, hd)
-        g = pool[:, safe]                      # (L, B, MB, bs, kv, hd)
-        L = pool.shape[0]
+        # pool: (L, NB, bs, kv, hd) — vectorized per-layer gather_block_view
+        g = pool[:, jnp.maximum(bt, 0)]        # (L, B, MB, bs, kv, hd)
+        L, B, MB = g.shape[0], g.shape[1], g.shape[2]
         return g.reshape(L, B, MB * pcfg.block_size, *pool.shape[3:])
 
     return gather(cache["k_pool"]), gather(cache["v_pool"]), cache["len"]

@@ -34,6 +34,9 @@ class Request:
     prompt_pos: int = 0      # next prompt index to prefill (chunked path)
     prompt_offset: int = 0   # head tokens skipped at admission (chunked path)
     admit_wait: int = 0      # schedule() calls spent waiting (admission aging)
+    admit_step: int = -1     # scheduler step of the latest admission
+    preempt_count: int = 0   # times evicted under KV-block pressure (§9)
+    truncated: bool = False  # stopped at cache capacity (paged decode, §9)
 
     def record_token(self, tok: int, now: float) -> None:
         """Commit one sampled token into request state (single source of
@@ -49,12 +52,19 @@ class Request:
     def prompt_len(self) -> int:
         return len(self.prompt)
 
+    def context_tokens(self) -> List[int]:
+        """Effective prompt plus committed output — the sequence a resume
+        re-prefills. Honors ``prompt_offset`` so a head-skipped chunked
+        prompt resumes over exactly the window it originally prefilled
+        (bit-identity through preemption, DESIGN.md §9)."""
+        return list(self.prompt[self.prompt_offset:]) + list(self.output)
+
     @property
     def done(self) -> bool:
         return self.state == RequestState.FINISHED
 
     def should_stop(self) -> bool:
-        if len(self.output) >= self.max_new_tokens:
+        if self.truncated or len(self.output) >= self.max_new_tokens:
             return True
         return (self.eos_token is not None and self.output and
                 self.output[-1] == self.eos_token)

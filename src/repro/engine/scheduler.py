@@ -19,6 +19,11 @@ Two upgrades over plain FCFS (DESIGN.md §8):
   FCFS within each class; a request that has waited ``max_admission_wait``
   schedule calls is promoted to the front regardless, so long prompts
   cannot starve.
+* **Block-based admission + preemption** (DESIGN.md §9) — with a paged KV
+  engine, ``kv_gate`` admits a request only when its worst-case
+  ``ceil((prompt+max_new)/block_size)`` blocks are free, and ``preempt``
+  evicts the most recently admitted request under pool pressure,
+  re-queueing it at the front for recompute-on-resume.
 
 The engine commits tokens against the *snapshot* of slot assignments taken
 when the iteration was dispatched (``SchedulingOutput.slot_request``), which
@@ -29,7 +34,7 @@ request (speculative slot reuse — DESIGN.md §2).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional
+from typing import Callable, List, Optional
 
 import numpy as np
 
@@ -63,16 +68,28 @@ class Scheduler:
     def __init__(self, num_slots: int, prompt_chunk: int = 0,
                  priority_admission: bool = True,
                  max_admission_wait: int = 64,
-                 max_prompt: Optional[int] = None):
+                 max_prompt: Optional[int] = None,
+                 kv_gate: Optional[Callable[[Request, List[Request]], bool]]
+                 = None,
+                 on_free: Optional[Callable[[int, Request], None]] = None):
+        """``kv_gate(req, admitted_this_round)``: block-based admission
+        (DESIGN.md §9) — a request enters a free slot only if the KV pool
+        can cover its worst case; candidates that do not fit are skipped
+        (not head-of-line blocking) and retried every round. ``on_free``
+        fires whenever a slot gives up its KV claim (retire or preemption)
+        so the engine can release the slot's blocks."""
         self.num_slots = num_slots
         self.prompt_chunk = prompt_chunk
         self.priority_admission = priority_admission
         self.max_admission_wait = max_admission_wait
         self.max_prompt = max_prompt
+        self.kv_gate = kv_gate
+        self.on_free = on_free
         self.waiting: List[Request] = []
         self.slots: List[Optional[Request]] = [None] * num_slots
         self.step = 0
         self.finished: List[Request] = []
+        self.preemptions = 0
 
     # -- queue management -----------------------------------------------------
     def submit(self, request: Request) -> None:
@@ -94,6 +111,30 @@ class Scheduler:
                 req.state = RequestState.FINISHED
                 self.finished.append(req)
                 self.slots[i] = None
+                if self.on_free is not None:
+                    self.on_free(i, req)
+
+    def preempt(self, victim: Request) -> None:
+        """Evict a slotted request under KV-block pressure (DESIGN.md §9):
+        free its slot (releasing its blocks via ``on_free``) and re-queue
+        it at the *front* of the waiting queue. Committed output survives —
+        the next admission re-prefills prompt+output (recompute-on-resume)
+        and decoding continues bit-identically at position len(output)."""
+        slot = victim.slot
+        assert 0 <= slot < self.num_slots and self.slots[slot] is victim, \
+            "preempt target is not slotted"
+        self.slots[slot] = None
+        victim.slot = -1
+        victim.state = RequestState.WAITING
+        victim.preempt_count += 1
+        victim.prompt_pos = 0
+        # re-queued victims are never starved: front of the queue plus the
+        # aged priority class (admission order puts them first)
+        victim.admit_wait = self.max_admission_wait
+        self.preemptions += 1
+        if self.on_free is not None:
+            self.on_free(slot, victim)
+        self.waiting.insert(0, victim)
 
     def _admission_order(self) -> List[int]:
         """Indices into ``waiting`` in admission order.
@@ -112,21 +153,43 @@ class Scheduler:
     def schedule(self) -> SchedulingOutput:
         """Retire finished requests, admit waiting ones, emit the plan."""
         self.retire_finished()
-        # admit into free slots in priority order
+        # admit into free slots in priority order; with a kv_gate, a
+        # candidate whose block demand does not fit is skipped this round
+        # (later, smaller requests may still be admitted)
         new: List[Request] = []
         new_chunked: List[Request] = []
         free = [i for i in range(self.num_slots) if self.slots[i] is None]
         if free and self.waiting:
             order = self._admission_order()
-            for rank, slot in zip(order, free):
+            admitted: set = set()
+            round_admits: List[Request] = []
+            for rank in order:
+                if not free:
+                    break
                 req = self.waiting[rank]
+                if self.kv_gate is not None and \
+                        not self.kv_gate(req, round_admits):
+                    if req.admit_wait >= self.max_admission_wait:
+                        # drain for an aged (or preempted) request: stop
+                        # admitting behind it so freed blocks accumulate
+                        # toward its demand instead of being re-consumed
+                        # by younger, smaller requests (no starvation, §9)
+                        break
+                    continue
+                slot = free.pop(0)
                 req.slot = slot
+                req.admit_step = self.step
                 self.slots[slot] = req
+                admitted.add(rank)
+                round_admits.append(req)
                 if self.prompt_chunk > 0 and \
-                        req.prompt_len > self.prompt_chunk:
+                        req.prompt_len > self.prompt_chunk and \
+                        not req.output:
                     # head-skip overlong prompts (the monolithic path's
                     # truncation, expressed as an offset so the caller's
-                    # prompt is never modified)
+                    # prompt is never modified). Resumed requests (committed
+                    # output after preemption) always re-prefill
+                    # monolithically — chunk spans index the prompt alone.
                     req.prompt_offset = 0
                     if self.max_prompt and req.prompt_len > self.max_prompt:
                         req.prompt_offset = req.prompt_len - self.max_prompt
@@ -136,7 +199,6 @@ class Scheduler:
                 else:
                     req.state = RequestState.RUNNING
                     new.append(req)
-            admitted = set(order[:min(len(free), len(order))])
             self.waiting = [r for i, r in enumerate(self.waiting)
                             if i not in admitted]
         for r in self.waiting:

@@ -3,11 +3,14 @@
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --reduced \
         --requests 16 --max-new 24
 
-Engine execution mode (DESIGN.md §2/§8):
+Engine execution mode (DESIGN.md §2/§8/§9):
 
     --overlap / --no-overlap    double-buffered vs synchronous iteration loop
     --prompt-chunk N            chunked prefill width (0 = monolithic)
     --long-prompts              synthesize a long-prompt-heavy workload
+    --cache paged               block-pool KV cache (vLLM-style paging)
+    --block-size N              tokens per KV block (paged)
+    --num-blocks N              pool size; 0 = memory-equal to contiguous
 """
 from __future__ import annotations
 
@@ -25,7 +28,8 @@ from repro.models.model import Model
 
 def build_engine(arch: str, reduced: bool, algorithm: str, batch: int,
                  max_seq: int, seed: int = 0, overlap: bool = True,
-                 prompt_chunk: int = 0) -> Engine:
+                 prompt_chunk: int = 0, cache: str = "contiguous",
+                 block_size: int = 16, num_blocks: int = 0) -> Engine:
     cfg = get_arch(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -35,7 +39,9 @@ def build_engine(arch: str, reduced: bool, algorithm: str, batch: int,
                         algorithm=algorithm,
                         shvs=SHVSConfig(hot_size=min(1024, cfg.vocab_size // 4)),
                         k_cap=min(256, cfg.vocab_size), seed=seed,
-                        overlap=overlap, prompt_chunk=prompt_chunk)
+                        overlap=overlap, prompt_chunk=prompt_chunk,
+                        cache=cache, block_size=block_size,
+                        num_blocks=num_blocks)
     return Engine(cfg, params, ecfg)
 
 
@@ -77,11 +83,19 @@ def main() -> None:
                     help="chunked-prefill width; 0 = monolithic prefill")
     ap.add_argument("--long-prompts", action="store_true",
                     help="mix in long prompts (exercises chunked prefill)")
+    ap.add_argument("--cache", choices=("contiguous", "paged"),
+                    default="contiguous",
+                    help="KV layout: per-slot slabs or a paged block pool")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per KV block (paged cache)")
+    ap.add_argument("--num-blocks", type=int, default=0,
+                    help="paged pool size; 0 = memory-equal to contiguous")
     args = ap.parse_args()
 
     eng = build_engine(args.arch, args.reduced, args.algorithm, args.batch,
                        args.max_seq, overlap=args.overlap,
-                       prompt_chunk=args.prompt_chunk)
+                       prompt_chunk=args.prompt_chunk, cache=args.cache,
+                       block_size=args.block_size, num_blocks=args.num_blocks)
     reqs = synth_requests(args.requests, eng.cfg.vocab_size, args.max_new,
                           long_prompts=args.long_prompts)
     eng.submit(reqs)
@@ -93,8 +107,13 @@ def main() -> None:
     toks = sum(len(r.output) for r in done)
     mode = "overlapped" if args.overlap else "sequential"
     chunk = f", prompt_chunk={args.prompt_chunk}" if args.prompt_chunk else ""
+    kv = ""
+    if args.cache == "paged":
+        kv = (f", paged bs={eng.pcfg.block_size} "
+              f"pool={eng.pcfg.num_blocks} "
+              f"preemptions={eng.scheduler.preemptions}")
     print(f"\nserved {len(done)} requests, {toks} tokens in {dt:.2f}s "
-          f"({toks / dt:.1f} tok/s) [{mode}{chunk}]")
+          f"({toks / dt:.1f} tok/s) [{mode}{chunk}{kv}]")
     tpot = []
     ttft = []
     for r in done:

@@ -212,6 +212,85 @@ def attend_chunk_cached(q, cache_k, cache_v, offsets):
     return _attend_scores_softmax(q, cache_k, cache_v, mask, scale)
 
 
+# ---------------------------------------------------------------------------
+# Paged KV primitives (vLLM-style block pool — DESIGN.md §9)
+#
+# The pool is (NB, bs, kv, hd) per layer; a per-row block table (B, MB) of
+# pool indices (-1 = unallocated) maps logical position p of row b to
+# physical slot table[b, p // bs] * bs + p % bs. Attention never runs over
+# the pool directly: `gather_block_view` materializes a contiguous
+# (B, MB*bs, kv, hd) view and the existing `attend_decode` /
+# `attend_chunk_cached` length masks do the rest — pages change where K/V
+# live, never their values, so the paged path is bit-identical to the
+# contiguous cache whenever the view width matches the contiguous S_c.
+# ---------------------------------------------------------------------------
+
+
+def gather_block_view(pool_layer, block_table, block_size: int):
+    """Materialize one layer's contiguous view of the block pool.
+
+    pool_layer: (NB, bs, kv, hd); block_table: (B, MB) int32 (-1 = free).
+    Returns (B, MB*bs, kv, hd). Unallocated table entries read block 0 —
+    those positions are always >= the row's length and masked in attention.
+    """
+    B, MB = block_table.shape
+    g = pool_layer[jnp.maximum(block_table, 0)]     # (B, MB, bs, kv, hd)
+    return g.reshape(B, MB * block_size, *pool_layer.shape[2:])
+
+
+def flat_block_indices(block_table, lens, valid, block_size: int,
+                       num_blocks: int):
+    """Physical destinations for a (B, C) slab write starting at ``lens``.
+
+    valid: (B, C) bool — which of the C candidate tokens per row to write.
+    Returns (B, C) int32 indices into the flattened (NB*bs) pool; invalid
+    positions (masked, past the table, or on an unallocated block) map to
+    NB*bs, i.e. out of bounds, so a scatter with mode="drop" skips them.
+    """
+    B, C = valid.shape
+    MB = block_table.shape[1]
+    pos = lens[:, None] + jnp.arange(C, dtype=lens.dtype)[None, :]
+    blk = pos // block_size
+    ok = valid & (blk < MB)
+    pool_idx = jnp.take_along_axis(block_table, jnp.clip(blk, 0, MB - 1),
+                                   axis=1)
+    ok &= pool_idx >= 0
+    flat = pool_idx * block_size + pos % block_size
+    return jnp.where(ok, flat, num_blocks * block_size).astype(jnp.int32)
+
+
+def scatter_block_kv(pool, new, flat):
+    """Scatter new K/V entries into the (flattened) block pool.
+
+    pool: (NB, bs, kv, hd) or (L, NB, bs, kv, hd); new: (B, C, kv, hd) or
+    (L, B, C, kv, hd); flat: (B, C) from :func:`flat_block_indices`
+    (out-of-bounds entries are dropped). Valid destinations are unique —
+    rows own disjoint blocks and positions within a row are distinct — so
+    the scatter is order-independent.
+    """
+    idx = flat.reshape(-1)
+    if pool.ndim == 5:
+        L, NB, bs = pool.shape[:3]
+        pf = pool.reshape(L, NB * bs, *pool.shape[3:])
+        pf = pf.at[:, idx].set(new.reshape(L, -1, *new.shape[3:]),
+                               mode="drop")
+        return pf.reshape(pool.shape)
+    NB, bs = pool.shape[:2]
+    pf = pool.reshape(NB * bs, *pool.shape[2:])
+    pf = pf.at[idx].set(new.reshape(-1, *new.shape[2:]), mode="drop")
+    return pf.reshape(pool.shape)
+
+
+def attend_paged(q, k_pool_layer, v_pool_layer, block_table, kv_len,
+                 block_size: int):
+    """Decode attention straight off one layer's block pool: gather the
+    contiguous block view, then run the standard length-masked decode
+    attention over it. q: (B, 1, nkv, g, hd); kv_len: (B,) valid entries."""
+    gk = gather_block_view(k_pool_layer, block_table, block_size)
+    gv = gather_block_view(v_pool_layer, block_table, block_size)
+    return attend_decode(q, gk, gv, kv_len)
+
+
 def attend_decode(q, cache_k, cache_v, kv_len, *, window: int = 0,
                   ring: bool = False):
     """Single-step decode attention.

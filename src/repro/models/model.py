@@ -92,12 +92,13 @@ class Model:
         return x, positions, enc_out
 
     def _stack(self, params, x, positions, cache, mode, window=None,
-               remat=False, enc_out=None, chunk_mask=None):
+               remat=False, enc_out=None, chunk_mask=None, chunk_counts=None):
         cfg = self.cfg
         if cfg.family in _DENSE_FAMILIES:
             return apply_dense_stack(params["stack"], x, positions, cfg, cache,
                                      mode, window=window, remat=remat,
-                                     enc_out=enc_out, chunk_mask=chunk_mask)
+                                     enc_out=enc_out, chunk_mask=chunk_mask,
+                                     chunk_counts=chunk_counts)
         if cfg.family == "ssm":
             return apply_rwkv_stack(params["stack"], x, positions, cfg, cache,
                                     mode, window=window, remat=remat)
@@ -154,7 +155,9 @@ class Model:
         advance — co-resident decode rows keep their cache intact even at
         capacity. Returns (logits at each row's last valid chunk position
         (B, V), cache). Dense/MoE full-causal decoder archs only — the
-        engine gates eligibility (DESIGN.md §8).
+        engine gates eligibility (DESIGN.md §8). Works on contiguous and
+        paged caches alike (DESIGN.md §9); the paged pool scatter needs the
+        per-row valid counts, hence ``chunk_counts=counts``.
         """
         cfg = self.cfg
         assert cfg.family in ("dense", "moe") and not cfg.is_encdec and \
@@ -163,7 +166,7 @@ class Model:
         x, positions, _ = self._embed_inputs(params, {"tokens": tokens},
                                              lens=lens0)
         y, cache, _ = self._stack(params, x, positions, cache, "chunk",
-                                  chunk_mask=mask)
+                                  chunk_mask=mask, chunk_counts=counts)
         B, C = tokens.shape
         idx = jnp.clip(counts - 1, 0, C - 1)
         y_last = y[jnp.arange(B), idx]

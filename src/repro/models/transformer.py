@@ -156,11 +156,19 @@ def init_dense_stack(key, cfg: ModelConfig):
 
 def apply_dense_stack(params, x, positions, cfg: ModelConfig, cache, mode: str,
                       window: Optional[int] = None, remat: bool = False,
-                      enc_out=None, chunk_mask=None):
+                      enc_out=None, chunk_mask=None, chunk_counts=None):
     """x: (B, S, d). Returns (y, cache, aux_loss).
 
     For encoder-decoder models (whisper): pass ``enc_out`` in train/prefill
     mode; prefill stores the projected cross-K/V into the cache for decode.
+
+    A *paged* cache (keys ``k_pool``/``v_pool``/``block_table`` — DESIGN.md
+    §9) is accepted transparently in decode/chunk mode: each layer gathers
+    its contiguous block view, runs the standard cached attention over it
+    (bit-identical to the contiguous path when the view width matches), and
+    the new K/V land in the pool via an out-of-bounds-dropping scatter.
+    ``chunk_counts`` (B,) gives the valid tokens per row of a chunk slab
+    (paged chunk writes only; the contiguous slab write doesn't need it).
     """
     use_ln = cfg.family == "audio"   # whisper uses LayerNorm (bias-free here)
     norm = (lambda h, w: layer_norm(h, w, jnp.zeros_like(w), cfg.rmsnorm_eps)) \
@@ -169,6 +177,28 @@ def apply_dense_stack(params, x, positions, cfg: ModelConfig, cache, mode: str,
     kv_len = None if cache is None else (
         cache["len"] + (1 if mode == "decode" else x.shape[1]))
     lens0 = None if cache is None else cache["len"]
+    paged = cache is not None and "k_pool" in cache
+    if paged:
+        assert mode in ("decode", "chunk"), \
+            "paged cache supports decode/chunk only (prefill rows are " \
+            "scattered in by the engine)"
+        from repro.models.attention import (flat_block_indices,
+                                            gather_block_view,
+                                            scatter_block_kv)
+        bt = cache["block_table"]
+        blk = cache["k_pool"].shape[2]
+        nblocks = cache["k_pool"].shape[1]
+        C = x.shape[1]
+        if mode == "decode":
+            pool_valid = jnp.ones((x.shape[0], C), bool)
+        else:
+            counts = chunk_counts if chunk_counts is not None \
+                else jnp.full((x.shape[0],), C, jnp.int32)
+            pool_valid = jnp.arange(C)[None, :] < counts[:, None]
+            if chunk_mask is not None:
+                pool_valid &= chunk_mask[:, None]
+        # one (B, C) destination map shared by every layer's pool scatter
+        pool_flat = flat_block_indices(bt, lens0, pool_valid, blk, nblocks)
     compute_cross = cfg.is_encdec and mode in ("train", "prefill")
 
     def body(carry, xs):
@@ -180,7 +210,13 @@ def apply_dense_stack(params, x, positions, cfg: ModelConfig, cache, mode: str,
                                              mode="train", window=win)
             ck = cv = None
         else:
-            ck_in, cv_in = xs["ck"], xs["cv"]
+            if paged:
+                # materialize this layer's contiguous view of the pool; the
+                # standard decode/chunk attention below runs on it unchanged
+                ck_in = gather_block_view(xs["kp"], bt, blk)
+                cv_in = gather_block_view(xs["vp"], bt, blk)
+            else:
+                ck_in, cv_in = xs["ck"], xs["cv"]
             if mode == "decode":
                 # write first so the current token attends to itself
                 _, k, v = attention_block(lp["attn"], h, cfg, positions,
@@ -226,7 +262,13 @@ def apply_dense_stack(params, x, positions, cfg: ModelConfig, cache, mode: str,
         x = dist.constrain(x, dist.batch_spec_entry(), None, None)
         ys = {}
         if ck is not None:
-            ys["ck"], ys["cv"] = ck, cv
+            if paged:
+                # persist only the new tokens: scatter them into the pool
+                # (the gathered view ck/cv was a per-iteration temporary)
+                ys["kp"] = scatter_block_kv(xs["kp"], k, pool_flat)
+                ys["vp"] = scatter_block_kv(xs["vp"], v, pool_flat)
+            else:
+                ys["ck"], ys["cv"] = ck, cv
         if cfg.is_encdec and compute_cross and cache is not None:
             ys["cross_k"], ys["cross_v"] = ys_cross
         return (x, aux), ys
@@ -238,14 +280,20 @@ def apply_dense_stack(params, x, positions, cfg: ModelConfig, cache, mode: str,
                   if k != "final_ln"}
     xs = {"layer": layer_tree}
     if cache is not None:
-        xs["ck"], xs["cv"] = cache["k"], cache["v"]
+        if paged:
+            xs["kp"], xs["vp"] = cache["k_pool"], cache["v_pool"]
+        else:
+            xs["ck"], xs["cv"] = cache["k"], cache["v"]
         if cfg.is_encdec and not compute_cross:
             xs["cross_k"], xs["cross_v"] = cache["cross_k"], cache["cross_v"]
 
     (x, aux), ys = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
-    if cache is not None and mode != "train" and "ck" in ys:
+    if cache is not None and mode != "train" and ("ck" in ys or "kp" in ys):
         cache = dict(cache)
-        cache["k"], cache["v"] = ys["ck"], ys["cv"]
+        if "kp" in ys:
+            cache["k_pool"], cache["v_pool"] = ys["kp"], ys["vp"]
+        else:
+            cache["k"], cache["v"] = ys["ck"], ys["cv"]
         if "cross_k" in ys:
             cache["cross_k"], cache["cross_v"] = ys["cross_k"], ys["cross_v"]
         S_new = 1 if mode == "decode" else positions.shape[-1]

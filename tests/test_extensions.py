@@ -1,9 +1,9 @@
 """Beyond-paper extensions: Gumbel decision-plane algorithm, online hot-size
-controller (paper future-work (i)), paged KV cache."""
+controller (paper future-work (i)), constrained decoding. (The paged KV
+cache suite moved to tests/test_paged_cache.py — DESIGN.md §9.)"""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.config import SamplingConfig
 from repro.core.autotune import HotSizeController, fit_zipf_s, zipf_alpha_curve
@@ -93,94 +93,6 @@ class TestHotSizeController:
         for _ in range(60):
             ctl.observe(0.30)      # hot set suddenly covers little mass
         assert ctl.h_current > h_good
-
-
-class TestPagedCache:
-    def test_matches_contiguous_semantics(self):
-        """Write a token stream through the paged cache; the gathered view
-        must equal the contiguous cache contents at every valid position."""
-        from repro.config import get_arch
-        from repro.engine.paged_cache import (BlockAllocator, PagedCacheConfig,
-                                              init_paged_cache, paged_gather,
-                                              paged_write)
-        cfg = get_arch("smollm-360m").reduced()
-        B, T = 3, 10
-        pcfg = PagedCacheConfig(block_size=4, num_blocks=16,
-                                max_blocks_per_seq=4)
-        cache = init_paged_cache(cfg, B, pcfg, dtype=jnp.float32)
-        alloc = BlockAllocator(pcfg, B)
-        rng = np.random.default_rng(0)
-        L, kv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
-        ref_k = np.zeros((L, B, T, kv, hd), np.float32)
-        lens = np.zeros((B,), np.int32)
-        for t in range(T):
-            active = np.asarray([True, t % 2 == 0, True])  # slot1 every other
-            k_new = rng.normal(0, 1, (L, B, 1, kv, hd)).astype(np.float32)
-            v_new = k_new + 1.0
-            for b in range(B):
-                if active[b]:
-                    alloc.ensure(b, int(lens[b]) + 1)
-            cache["block_table"] = jnp.asarray(alloc.table(B))
-            cache = paged_write(cache, (jnp.asarray(k_new), jnp.asarray(v_new)),
-                                jnp.asarray(lens), pcfg,
-                                active=jnp.asarray(active))
-            for b in range(B):
-                if active[b]:
-                    ref_k[:, b, lens[b]] = k_new[:, b, 0]
-                    lens[b] += 1
-        gk, gv, glens = paged_gather(cache, pcfg)
-        np.testing.assert_array_equal(np.asarray(glens), lens)
-        gk = np.asarray(gk)
-        for b in range(B):
-            np.testing.assert_allclose(gk[:, b, :lens[b]], ref_k[:, b, :lens[b]],
-                                       rtol=1e-6)
-
-    def test_allocator_reuses_freed_blocks(self):
-        from repro.engine.paged_cache import BlockAllocator, PagedCacheConfig
-        pcfg = PagedCacheConfig(block_size=4, num_blocks=4,
-                                max_blocks_per_seq=4)
-        alloc = BlockAllocator(pcfg, 2)
-        alloc.ensure(0, 16)         # all 4 blocks
-        with pytest.raises(RuntimeError):
-            alloc.ensure(1, 1)
-        alloc.release(0)
-        alloc.ensure(1, 8)          # succeeds after release
-        assert len(alloc.owned[1]) == 2
-
-    def test_attention_over_paged_view_matches(self):
-        """attend_decode over the paged gather == over a contiguous cache."""
-        from repro.config import get_arch
-        from repro.engine.paged_cache import (BlockAllocator, PagedCacheConfig,
-                                              init_paged_cache, paged_gather,
-                                              paged_write)
-        from repro.models.attention import attend_decode
-        cfg = get_arch("smollm-360m").reduced()
-        B, T = 2, 7
-        pcfg = PagedCacheConfig(block_size=4, num_blocks=8,
-                                max_blocks_per_seq=3)
-        cache = init_paged_cache(cfg, B, pcfg, dtype=jnp.float32)
-        alloc = BlockAllocator(pcfg, B)
-        rng = np.random.default_rng(1)
-        L, kv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
-        cont_k = np.zeros((B, T, kv, hd), np.float32)
-        cont_v = np.zeros((B, T, kv, hd), np.float32)
-        for t in range(T):
-            k_new = rng.normal(0, 1, (L, B, 1, kv, hd)).astype(np.float32)
-            v_new = rng.normal(0, 1, (L, B, 1, kv, hd)).astype(np.float32)
-            for b in range(B):
-                alloc.ensure(b, t + 1)
-            cache["block_table"] = jnp.asarray(alloc.table(B))
-            cache = paged_write(cache, (jnp.asarray(k_new), jnp.asarray(v_new)),
-                                jnp.full((B,), t, jnp.int32), pcfg)
-            cont_k[:, t] = k_new[0, :, 0]
-            cont_v[:, t] = v_new[0, :, 0]
-        gk, gv, glens = paged_gather(cache, pcfg)
-        q = jnp.asarray(rng.normal(0, 1, (B, 1, kv, 2, hd)), jnp.float32)
-        out_paged = attend_decode(q, gk[0], gv[0], jnp.full((B,), T))
-        out_cont = attend_decode(q, jnp.asarray(cont_k), jnp.asarray(cont_v),
-                                 jnp.full((B,), T))
-        np.testing.assert_allclose(np.asarray(out_paged), np.asarray(out_cont),
-                                   rtol=1e-5, atol=1e-6)
 
 
 class TestConstrainedDecoding:

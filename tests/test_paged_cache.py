@@ -1,0 +1,267 @@
+"""Paged KV cache unit tests (DESIGN.md §9): block pool write/gather
+numerics vs the contiguous cache, allocator behaviour, block-table reuse,
+partial-final-block masking, and multi-layer write consistency."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_arch
+from repro.engine.paged_cache import (BlockAllocator, PagedCacheConfig,
+                                      init_paged_cache, paged_gather,
+                                      paged_write)
+from repro.models.attention import attend_decode, attend_paged
+
+pytestmark = pytest.mark.paged
+
+
+def _cfg():
+    return get_arch("smollm-360m").reduced()
+
+
+def _dims(cfg):
+    return cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+
+
+class TestPagedWriteGather:
+    def test_matches_contiguous_semantics(self):
+        """Write a token stream through the paged cache; the gathered view
+        must equal the contiguous cache contents at every valid position."""
+        cfg = _cfg()
+        B, T = 3, 10
+        pcfg = PagedCacheConfig(block_size=4, num_blocks=16,
+                                max_blocks_per_seq=4)
+        cache = init_paged_cache(cfg, B, pcfg, dtype=jnp.float32)
+        alloc = BlockAllocator(pcfg, B)
+        rng = np.random.default_rng(0)
+        L, kv, hd = _dims(cfg)
+        ref_k = np.zeros((L, B, T, kv, hd), np.float32)
+        lens = np.zeros((B,), np.int32)
+        for t in range(T):
+            active = np.asarray([True, t % 2 == 0, True])  # slot1 every other
+            k_new = rng.normal(0, 1, (L, B, 1, kv, hd)).astype(np.float32)
+            v_new = k_new + 1.0
+            for b in range(B):
+                if active[b]:
+                    alloc.ensure(b, int(lens[b]) + 1)
+            cache["block_table"] = jnp.asarray(alloc.table(B))
+            cache = paged_write(cache, (jnp.asarray(k_new), jnp.asarray(v_new)),
+                                jnp.asarray(lens), pcfg,
+                                active=jnp.asarray(active))
+            for b in range(B):
+                if active[b]:
+                    ref_k[:, b, lens[b]] = k_new[:, b, 0]
+                    lens[b] += 1
+        gk, gv, glens = paged_gather(cache, pcfg)
+        np.testing.assert_array_equal(np.asarray(glens), lens)
+        gk = np.asarray(gk)
+        for b in range(B):
+            np.testing.assert_allclose(gk[:, b, :lens[b]], ref_k[:, b, :lens[b]],
+                                       rtol=1e-6)
+
+    def test_chunk_write_equals_token_writes(self):
+        """paged_write with a C-token chunk per row must land the same pool
+        contents as C consecutive single-token writes."""
+        cfg = _cfg()
+        B, C = 2, 6
+        pcfg = PagedCacheConfig(block_size=4, num_blocks=8,
+                                max_blocks_per_seq=4)
+        L, kv, hd = _dims(cfg)
+        rng = np.random.default_rng(2)
+        k_new = rng.normal(0, 1, (L, B, C, kv, hd)).astype(np.float32)
+        v_new = rng.normal(0, 1, (L, B, C, kv, hd)).astype(np.float32)
+        counts = np.asarray([C, C - 2], np.int32)   # row1 partial chunk
+        start = np.asarray([3, 0], np.int32)        # row0 mid-block offset
+
+        chunked = init_paged_cache(cfg, B, pcfg, dtype=jnp.float32)
+        stepped = init_paged_cache(cfg, B, pcfg, dtype=jnp.float32)
+        alloc = BlockAllocator(pcfg, B)
+        for b in range(B):
+            alloc.ensure(b, int(start[b]) + int(counts[b]))
+        bt = jnp.asarray(alloc.table(B))
+        chunked["block_table"] = bt
+        stepped["block_table"] = bt
+        chunked["len"] = jnp.asarray(start)
+        stepped["len"] = jnp.asarray(start)
+
+        chunked = paged_write(chunked, (jnp.asarray(k_new), jnp.asarray(v_new)),
+                              jnp.asarray(start), pcfg,
+                              counts=jnp.asarray(counts))
+        for c in range(C):
+            active = jnp.asarray(c < counts)
+            stepped = paged_write(
+                stepped, (jnp.asarray(k_new[:, :, c:c + 1]),
+                          jnp.asarray(v_new[:, :, c:c + 1])),
+                jnp.asarray(start + np.minimum(c, counts)), pcfg,
+                active=active)
+        np.testing.assert_array_equal(np.asarray(chunked["k_pool"]),
+                                      np.asarray(stepped["k_pool"]))
+        np.testing.assert_array_equal(np.asarray(chunked["v_pool"]),
+                                      np.asarray(stepped["v_pool"]))
+        np.testing.assert_array_equal(np.asarray(chunked["len"]),
+                                      np.asarray(stepped["len"]))
+
+    def test_multi_layer_write_consistency(self):
+        """All layers share one block table but keep disjoint pool planes:
+        layer l's gathered view must reproduce exactly layer l's stream."""
+        cfg = _cfg()
+        B, T = 2, 7
+        pcfg = PagedCacheConfig(block_size=2, num_blocks=12,
+                                max_blocks_per_seq=4)
+        L, kv, hd = _dims(cfg)
+        cache = init_paged_cache(cfg, B, pcfg, dtype=jnp.float32)
+        alloc = BlockAllocator(pcfg, B)
+        # layer-tagged values: entry (l, b, t) = l*100 + b*10 + t
+        ref = np.zeros((L, B, T, kv, hd), np.float32)
+        for t in range(T):
+            for b in range(B):
+                alloc.ensure(b, t + 1)
+            cache["block_table"] = jnp.asarray(alloc.table(B))
+            k_new = np.zeros((L, B, 1, kv, hd), np.float32)
+            for l in range(L):
+                for b in range(B):
+                    k_new[l, b] = l * 100 + b * 10 + t
+                    ref[l, b, t] = l * 100 + b * 10 + t
+            cache = paged_write(cache, (jnp.asarray(k_new), jnp.asarray(k_new)),
+                                jnp.full((B,), t, jnp.int32), pcfg)
+        gk, _, glens = paged_gather(cache, pcfg)
+        np.testing.assert_array_equal(np.asarray(glens), np.full((B,), T))
+        np.testing.assert_array_equal(np.asarray(gk)[:, :, :T], ref)
+
+    def test_block_table_reuse_after_free(self):
+        """Released blocks are handed to a new sequence; the recycled
+        physical blocks must serve the new owner's data and the old owner's
+        table entries must be gone."""
+        cfg = _cfg()
+        pcfg = PagedCacheConfig(block_size=4, num_blocks=4,
+                                max_blocks_per_seq=4)
+        L, kv, hd = _dims(cfg)
+        B = 2
+        cache = init_paged_cache(cfg, B, pcfg, dtype=jnp.float32)
+        alloc = BlockAllocator(pcfg, B)
+        # slot0 fills the whole pool
+        alloc.ensure(0, 16)
+        blocks0 = list(alloc.owned[0])
+        cache["block_table"] = jnp.asarray(alloc.table(B))
+        rng = np.random.default_rng(3)
+        for t in range(16):
+            kv_new = rng.normal(0, 1, (L, B, 1, kv, hd)).astype(np.float32)
+            cache = paged_write(cache, (jnp.asarray(kv_new), jnp.asarray(kv_new)),
+                                jnp.full((B,), t, jnp.int32), pcfg,
+                                active=jnp.asarray([True, False]))
+        # free slot0, give everything to slot1 — physical reuse
+        alloc.release(0)
+        got = alloc.ensure(1, 16)
+        assert sorted(got) == sorted(blocks0), "freed blocks not recycled"
+        table = alloc.table(B)
+        assert (table[0] == -1).all(), "stale table entries after release"
+        cache["block_table"] = jnp.asarray(table)
+        cache["len"] = jnp.asarray([0, 0], jnp.int32)
+        marker = np.full((L, B, 1, kv, hd), 7.5, np.float32)
+        cache = paged_write(cache, (jnp.asarray(marker), jnp.asarray(marker)),
+                            jnp.zeros((B,), jnp.int32), pcfg,
+                            active=jnp.asarray([False, True]))
+        gk, _, _ = paged_gather(cache, pcfg)
+        np.testing.assert_array_equal(np.asarray(gk)[:, 1, 0],
+                                      marker[:, 1, 0])
+
+    def test_partial_final_block_masked(self):
+        """A final block that is only partially valid must not leak its
+        stale tail into attention: attend over the gathered view with the
+        true length equals attention over a contiguous reference."""
+        cfg = _cfg()
+        B = 2
+        T = 6                       # block_size 4 -> final block half full
+        pcfg = PagedCacheConfig(block_size=4, num_blocks=8,
+                                max_blocks_per_seq=3)
+        L, kv, hd = _dims(cfg)
+        cache = init_paged_cache(cfg, B, pcfg, dtype=jnp.float32)
+        # poison the pool so an unmasked tail would visibly corrupt output
+        cache["k_pool"] = cache["k_pool"] + 37.0
+        cache["v_pool"] = cache["v_pool"] - 37.0
+        alloc = BlockAllocator(pcfg, B)
+        rng = np.random.default_rng(4)
+        cont_k = np.zeros((B, T, kv, hd), np.float32)
+        cont_v = np.zeros((B, T, kv, hd), np.float32)
+        for t in range(T):
+            k_new = rng.normal(0, 1, (L, B, 1, kv, hd)).astype(np.float32)
+            v_new = rng.normal(0, 1, (L, B, 1, kv, hd)).astype(np.float32)
+            for b in range(B):
+                alloc.ensure(b, t + 1)
+            cache["block_table"] = jnp.asarray(alloc.table(B))
+            cache = paged_write(cache, (jnp.asarray(k_new), jnp.asarray(v_new)),
+                                jnp.full((B,), t, jnp.int32), pcfg)
+            cont_k[:, t] = k_new[0, :, 0]
+            cont_v[:, t] = v_new[0, :, 0]
+        q = jnp.asarray(rng.normal(0, 1, (B, 1, kv, 2, hd)), jnp.float32)
+        out_paged = attend_paged(q, cache["k_pool"][0], cache["v_pool"][0],
+                                 cache["block_table"], jnp.full((B,), T),
+                                 pcfg.block_size)
+        out_cont = attend_decode(q, jnp.asarray(cont_k), jnp.asarray(cont_v),
+                                 jnp.full((B,), T))
+        np.testing.assert_allclose(np.asarray(out_paged), np.asarray(out_cont),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_attention_over_paged_view_matches(self):
+        """attend_decode over the paged gather == over a contiguous cache."""
+        cfg = _cfg()
+        B, T = 2, 7
+        pcfg = PagedCacheConfig(block_size=4, num_blocks=8,
+                                max_blocks_per_seq=3)
+        cache = init_paged_cache(cfg, B, pcfg, dtype=jnp.float32)
+        alloc = BlockAllocator(pcfg, B)
+        rng = np.random.default_rng(1)
+        L, kv, hd = _dims(cfg)
+        cont_k = np.zeros((B, T, kv, hd), np.float32)
+        cont_v = np.zeros((B, T, kv, hd), np.float32)
+        for t in range(T):
+            k_new = rng.normal(0, 1, (L, B, 1, kv, hd)).astype(np.float32)
+            v_new = rng.normal(0, 1, (L, B, 1, kv, hd)).astype(np.float32)
+            for b in range(B):
+                alloc.ensure(b, t + 1)
+            cache["block_table"] = jnp.asarray(alloc.table(B))
+            cache = paged_write(cache, (jnp.asarray(k_new), jnp.asarray(v_new)),
+                                jnp.full((B,), t, jnp.int32), pcfg)
+            cont_k[:, t] = k_new[0, :, 0]
+            cont_v[:, t] = v_new[0, :, 0]
+        gk, gv, glens = paged_gather(cache, pcfg)
+        q = jnp.asarray(rng.normal(0, 1, (B, 1, kv, 2, hd)), jnp.float32)
+        out_paged = attend_decode(q, gk[0], gv[0], jnp.full((B,), T))
+        out_cont = attend_decode(q, jnp.asarray(cont_k), jnp.asarray(cont_v),
+                                 jnp.full((B,), T))
+        np.testing.assert_allclose(np.asarray(out_paged), np.asarray(out_cont),
+                                   rtol=1e-5, atol=1e-6)
+
+
+class TestBlockAllocator:
+    def test_allocator_reuses_freed_blocks(self):
+        pcfg = PagedCacheConfig(block_size=4, num_blocks=4,
+                                max_blocks_per_seq=4)
+        alloc = BlockAllocator(pcfg, 2)
+        alloc.ensure(0, 16)         # all 4 blocks
+        with pytest.raises(RuntimeError):
+            alloc.ensure(1, 1)
+        alloc.release(0)
+        alloc.ensure(1, 8)          # succeeds after release
+        assert len(alloc.owned[1]) == 2
+
+    def test_exhaustion_is_atomic(self):
+        """A failing ensure must not leak a partial allocation."""
+        pcfg = PagedCacheConfig(block_size=4, num_blocks=3,
+                                max_blocks_per_seq=8)
+        alloc = BlockAllocator(pcfg, 2)
+        alloc.ensure(0, 8)          # 2 of 3 blocks
+        free_before = list(alloc.free)
+        owned_before = [list(b) for b in alloc.owned]
+        with pytest.raises(RuntimeError):
+            alloc.ensure(1, 12)     # needs 3, only 1 free
+        assert alloc.free == free_before
+        assert alloc.owned == owned_before
+        alloc.ensure(1, 4)          # the single free block still works
+
+    def test_per_seq_cap_reported(self):
+        pcfg = PagedCacheConfig(block_size=4, num_blocks=64,
+                                max_blocks_per_seq=2)
+        alloc = BlockAllocator(pcfg, 1)
+        with pytest.raises(RuntimeError):
+            alloc.ensure(0, 12)     # 3 blocks > max_blocks_per_seq
+        assert alloc.num_live == 0

@@ -1,0 +1,233 @@
+"""Paged-KV serving end-to-end (DESIGN.md §9).
+
+The paged cache is an *execution strategy*, not a semantics change: pages
+move where K/V live, never their values, so the engine's token streams must
+be bit-identical to the contiguous cache — across the overlapped loop, the
+commit lag, chunked prefill, and block-pressure preemption
+(recompute-on-resume)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.config import SamplingConfig, SHVSConfig, get_arch
+from repro.engine import Engine, Request, RequestState
+from repro.engine.engine import EngineConfig
+
+pytestmark = pytest.mark.paged
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    from repro.models.model import Model
+    cfg = get_arch("smollm-360m").reduced()
+    params = Model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _engine(cfg, params, **kw):
+    defaults = dict(max_batch=3, max_seq_len=96, algorithm="shvs",
+                    shvs=SHVSConfig(hot_size=64), k_cap=64, prompt_bucket=8)
+    defaults.update(kw)
+    return Engine(cfg, params, EngineConfig(**defaults))
+
+
+def _reqs(cfg, n, seed=0, minp=3, maxp=20, max_new=6):
+    """Heterogeneous lengths + stop conditions: slot reuse, staggered
+    retirement, multi-chunk prompts when prompt_chunk=8."""
+    rng = np.random.default_rng(seed)
+    return [Request(
+        request_id=i,
+        prompt=rng.integers(1, cfg.vocab_size,
+                            int(rng.integers(minp, maxp))).tolist(),
+        max_new_tokens=int(rng.integers(2, max_new + 1)),
+        sampling=SamplingConfig(temperature=0.9, top_k=30, top_p=0.95,
+                                repetition_penalty=1.1))
+        for i in range(n)]
+
+
+def _outputs(cfg, params, reqs=None, n=6, max_steps=800, **kw):
+    eng = _engine(cfg, params, **kw)
+    eng.submit(reqs if reqs is not None else _reqs(cfg, n))
+    done = eng.run(max_steps=max_steps)
+    assert len(done) == (len(reqs) if reqs is not None else n), \
+        "not all requests completed"
+    assert eng.in_flight == 0
+    return {r.request_id: r.output for r in done}, eng
+
+
+def test_paged_requires_block_aligned_capacity(small_model):
+    cfg, params = small_model
+    with pytest.raises(AssertionError):
+        _engine(cfg, params, cache="paged", max_seq_len=90, block_size=16)
+
+
+def test_paged_bit_identical_all_modes(small_model):
+    """Differential contract: the same trace served with cache='paged' and
+    cache='contiguous' yields bit-identical per-request token streams in
+    all four {overlapped, sequential} x {monolithic, chunked} combinations."""
+    cfg, params = small_model
+    ref = None
+    for overlap in (True, False):
+        for chunk in (0, 8):
+            got = {}
+            for cache in ("contiguous", "paged"):
+                got[cache], _ = _outputs(cfg, params, overlap=overlap,
+                                         prompt_chunk=chunk, cache=cache)
+            assert got["paged"] == got["contiguous"], \
+                f"paged != contiguous (overlap={overlap}, chunk={chunk})"
+            if ref is None:
+                ref = got["contiguous"]
+            # the cross-mode identity contract holds transitively
+            assert got["contiguous"] == ref, \
+                f"mode drift (overlap={overlap}, chunk={chunk})"
+
+
+def test_block_admission_caps_concurrency(small_model):
+    """With a pool that covers only one worst-case request at a time, the
+    KV gate must serialize admission instead of over-admitting."""
+    cfg, params = small_model
+    reqs = _reqs(cfg, 4, seed=2, minp=4, maxp=8, max_new=6)
+    # worst case: ceil((7+6)/8) = 2 blocks -> pool of 2 serializes
+    eng = _engine(cfg, params, cache="paged", block_size=8, num_blocks=2)
+    eng.submit(reqs)
+    max_resident = 0
+    for _ in range(600):
+        eng.step()
+        max_resident = max(max_resident, eng.scheduler.num_active())
+        if not (eng.scheduler.has_work or eng.in_flight):
+            break
+    eng.flush()
+    assert len(eng.scheduler.finished) == 4
+    assert max_resident == 1, "KV gate failed to cap admission by blocks"
+    # and the serialized streams still match the contiguous run
+    ref, _ = _outputs(cfg, params, reqs=[
+        Request(r.request_id, list(r.prompt), r.max_new_tokens, r.sampling)
+        for r in reqs])
+    assert {r.request_id: r.output for r in eng.scheduler.finished} == ref
+
+
+def test_preemption_stress(small_model):
+    """Pool sized so decode growth exhausts it mid-run: victims must be
+    re-queued (recompute-on-resume), finish with the tokens they would have
+    produced unpreempted, and nobody starves."""
+    cfg, params = small_model
+
+    def mk():
+        rng = np.random.default_rng(7)
+        return [Request(
+            request_id=i,
+            prompt=rng.integers(1, cfg.vocab_size,
+                                int(rng.integers(4, 9))).tolist(),
+            max_new_tokens=40,
+            sampling=SamplingConfig(temperature=0.9, top_k=30, top_p=0.95,
+                                    repetition_penalty=1.1))
+            for i in range(5)]
+    ref, _ = _outputs(cfg, params, reqs=mk(), max_steps=2000)
+
+    for overlap in (True, False):
+        eng = _engine(cfg, params, cache="paged", block_size=16,
+                      num_blocks=8, overlap=overlap)
+        eng.submit(mk())
+        done = eng.run(max_steps=4000)
+        assert len(done) == 5, f"starvation: only {len(done)}/5 finished"
+        assert eng.scheduler.preemptions > 0, \
+            "pool was meant to exhaust mid-run"
+        assert any(r.preempt_count > 0 for r in done)
+        assert {r.request_id: r.output for r in done} == ref, \
+            f"preempted streams diverged (overlap={overlap})"
+        # every slot retired -> all blocks back in the free list
+        assert eng.alloc.num_free == eng.pcfg.num_blocks
+        assert eng.alloc.num_live == 0
+
+
+def test_overlong_request_truncates_instead_of_crashing(small_model):
+    """prompt+max_new beyond the cache capacity must finish at capacity
+    (Request.truncated) without killing co-resident requests."""
+    cfg, params = small_model
+    rng = np.random.default_rng(11)
+    overlong = Request(0, rng.integers(1, cfg.vocab_size, 40).tolist(),
+                       max_new_tokens=200,
+                       sampling=SamplingConfig(temperature=0.8, top_k=20))
+    normal = Request(1, rng.integers(1, cfg.vocab_size, 6).tolist(),
+                     max_new_tokens=5,
+                     sampling=SamplingConfig(temperature=0.8, top_k=20))
+    eng = _engine(cfg, params, cache="paged", max_seq_len=64, block_size=16)
+    eng.submit([overlong, normal])
+    done = eng.run(max_steps=400)
+    assert len(done) == 2
+    assert overlong.truncated and overlong.done
+    assert len(overlong.output) <= 64 - 40 + 1
+    assert len(normal.output) == 5
+
+
+def test_unservable_request_rejected_at_submit(small_model):
+    """A request whose worst-case block demand exceeds the whole pool can
+    never pass the admission gate — submit must fail fast, not spin."""
+    cfg, params = small_model
+    eng = _engine(cfg, params, cache="paged", block_size=8, num_blocks=2)
+    good = Request(1, list(range(1, 5)), max_new_tokens=4,
+                   sampling=SamplingConfig())
+    bad = Request(0, list(range(1, 11)), max_new_tokens=10,
+                  sampling=SamplingConfig())      # ceil(20/8)=3 > 2 blocks
+    with pytest.raises(ValueError, match="KV blocks"):
+        eng.submit([good, bad])
+    # submit is atomic: the valid request must not be half-enqueued
+    assert not eng.scheduler.waiting
+
+
+def test_resume_preserves_head_skipped_window(small_model):
+    """A preempted request admitted via chunked head-skip must resume over
+    exactly the window it originally prefilled (prompt[offset:] + output) —
+    same RoPE positions, bit-identical continuation, full output length."""
+    cfg, params = small_model
+    rng = np.random.default_rng(13)
+    prompt = rng.integers(1, cfg.vocab_size, 100).tolist()
+    samp = SamplingConfig(temperature=0.9, top_k=30, top_p=0.95)
+
+    def mk():
+        return Request(0, list(prompt), max_new_tokens=8, sampling=samp)
+
+    kw = dict(cache="paged", prompt_chunk=8, max_seq_len=96, max_batch=2)
+    ref_eng = _engine(cfg, params, **kw)
+    ref_eng.submit([mk()])
+    ref = ref_eng.run(max_steps=200)[0].output
+    assert len(ref) == 8
+
+    eng = _engine(cfg, params, **kw)
+    req = mk()
+    eng.submit([req])
+    for _ in range(200):
+        eng.step()
+        if len(req.output) >= 4:
+            break
+    eng.flush()
+    assert req.state is RequestState.RUNNING and len(req.output) >= 4
+    eng.scheduler.preempt(req)
+    done = eng.run(max_steps=400)
+    assert len(done) == 1 and done[0] is req
+    assert not req.truncated, "resume re-truncated the head-skipped window"
+    assert req.output == ref, "resumed stream diverged from unpreempted run"
+
+
+def test_preempted_request_state_roundtrip(small_model):
+    """Direct preemption: a running request evicted via the scheduler is
+    re-queued at the front with its committed output intact."""
+    cfg, params = small_model
+    eng = _engine(cfg, params, cache="paged")
+    eng.submit(_reqs(cfg, 2, seed=3, max_new=8))
+    eng.step()
+    eng.flush()
+    victim = next(s for s in eng.scheduler.slots if s is not None)
+    out_before = list(victim.output)
+    assert out_before, "victim should have committed output"
+    slot = victim.slot
+    eng.scheduler.preempt(victim)
+    assert victim.state is RequestState.WAITING
+    assert victim.preempt_count == 1
+    assert victim.slot == -1
+    assert eng.scheduler.waiting[0] is victim
+    assert victim.output == out_before
+    assert not eng.alloc.owned[slot], "preemption must release blocks"
+    done = eng.run(max_steps=400)
+    assert len(done) == 2
+    assert all(len(r.output) == r.max_new_tokens for r in done)

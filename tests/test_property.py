@@ -14,6 +14,7 @@ from repro.core.sampling import (SamplingParams, filter_mask_reference,
                                  truncation_first_sample)
 from repro.core.shvs import make_hot_set, shvs_masses, shvs_sample
 from repro.core.sizing import SizingModel, fit_affine_cost
+from repro.engine.paged_cache import BlockAllocator, PagedCacheConfig
 
 SETTINGS = dict(max_examples=25, deadline=None)
 
@@ -134,6 +135,57 @@ def test_shvs_tokens_in_support(data):
     ok = ~np.asarray(r.needs_reference)
     toks = np.asarray(r.tokens)
     assert mask[np.arange(B), toks][ok].all()
+
+
+@pytest.mark.paged
+@given(st.data())
+@settings(max_examples=40, deadline=None)
+def test_block_allocator_invariants(data):
+    """Arbitrary allocate/free interleavings (DESIGN.md §9): a block is
+    never double-allocated, free + live always partitions the pool, and
+    exhaustion is reported deterministically and atomically (a failing
+    ensure mutates nothing)."""
+    num_blocks = data.draw(st.integers(1, 24))
+    block_size = data.draw(st.sampled_from([1, 2, 4, 16]))
+    max_per_seq = data.draw(st.integers(1, 12))
+    batch = data.draw(st.integers(1, 5))
+    pcfg = PagedCacheConfig(block_size=block_size, num_blocks=num_blocks,
+                            max_blocks_per_seq=max_per_seq)
+    alloc = BlockAllocator(pcfg, batch)
+    lengths = [0] * batch
+
+    def check_invariants():
+        live = [b for owned in alloc.owned for b in owned]
+        assert len(live) == len(set(live)), "double-allocated block"
+        assert not set(live) & set(alloc.free), "block both live and free"
+        assert len(live) + len(alloc.free) == num_blocks, \
+            "pool leaked or grew"
+        for slot in range(batch):
+            assert len(alloc.owned[slot]) == alloc.blocks_needed(
+                lengths[slot]) or lengths[slot] == 0
+
+    for _ in range(data.draw(st.integers(1, 40))):
+        slot = data.draw(st.integers(0, batch - 1))
+        if data.draw(st.booleans()):
+            target = lengths[slot] + data.draw(st.integers(0, 3 * block_size))
+            need = alloc.blocks_needed(target)
+            grow = need - len(alloc.owned[slot])
+            must_fail = need > max_per_seq or grow > len(alloc.free)
+            free_before = list(alloc.free)
+            owned_before = [list(b) for b in alloc.owned]
+            try:
+                alloc.ensure(slot, target)
+                assert not must_fail, "ensure succeeded past exhaustion"
+                lengths[slot] = max(lengths[slot], target)
+            except RuntimeError:
+                assert must_fail, "spurious exhaustion report"
+                assert alloc.free == free_before, "failed ensure mutated free"
+                assert alloc.owned == owned_before, \
+                    "failed ensure leaked a partial allocation"
+        else:
+            alloc.release(slot)
+            lengths[slot] = 0
+        check_invariants()
 
 
 @given(st.data())

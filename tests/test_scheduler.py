@@ -110,6 +110,34 @@ def test_admission_aging_prevents_starvation():
         "aged long prompt should beat younger short prompt"
 
 
+def test_aged_gate_rejected_request_drains_admission():
+    """Once a KV-gated request ages past max_admission_wait, younger
+    requests must stop being admitted past it (blocks drain toward it
+    instead of being re-consumed — the §9 no-starvation rule)."""
+    fits = {0: False, 1: True, 2: True}
+
+    def gate(req, pending):
+        return fits[req.request_id]
+
+    sch = Scheduler(2, kv_gate=gate, max_admission_wait=2)
+    big, small = _req(0, 4), _req(1, 4)
+    sch.submit(big)
+    sch.submit(small)
+    out = sch.schedule()
+    # big is skipped (young, doesn't fit); small admitted past it
+    assert out.new_requests == [small]
+    assert big.state is RequestState.WAITING
+    for _ in range(3):
+        sch.schedule()               # big ages past the bound
+    sch.submit(_req(2, 4))
+    out = sch.schedule()
+    assert out.new_requests == [], \
+        "younger request admitted past an aged gate-rejected one"
+    fits[0] = True                   # pool drained -> big finally fits
+    out = sch.schedule()
+    assert out.new_requests == [big]
+
+
 def test_commit_uses_dispatch_snapshot():
     """Tokens commit against the slot->request snapshot taken at dispatch,
     and tokens for already-stopped requests are dropped (the overlapped
