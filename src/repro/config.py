@@ -289,7 +289,28 @@ class ParallelConfig:
 
 @dataclass(frozen=True)
 class SamplingConfig:
-    """Per-request sampling controls (full production set, §6 of paper)."""
+    """Per-request sampling contract (service API v1, DESIGN.md §11).
+
+    The full production control set (§6 of paper) plus the per-request
+    service fields:
+
+    * ``seed`` — when set, the request's uniform stream is drawn from
+      ``PRNGKey(seed)`` keyed on output position only: the token stream is
+      a pure function of (seed, prompt, params), invariant to batch
+      composition, admission order, engine seed, overlap mode, and KV
+      layout. ``None`` (default) keeps the engine-keyed (request-id)
+      stream.
+    * ``greedy`` — argmax decoding regardless of ``temperature`` (exactly
+      equivalent to ``temperature=0``; every backend's τ=0 path).
+    * ``logit_bias`` — ``((token_id, bias), ...)`` added to the logits
+      before penalties and filtering (a dict also works and is normalized
+      to a sorted tuple so the config stays hashable).
+    * ``stop_sequences`` — token-level stop sequences ``((id, ...), ...)``;
+      a request finishes with ``finish_reason == "stop"`` as soon as its
+      committed output ends with any of them (matching is over output
+      tokens only, never across the prompt boundary; the matched tokens
+      stay in ``Request.output``).
+    """
 
     temperature: float = 1.0
     top_k: int = 0                 # 0 disables
@@ -298,7 +319,42 @@ class SamplingConfig:
     repetition_penalty: float = 1.0
     presence_penalty: float = 0.0
     frequency_penalty: float = 0.0
-    seed: int = 0
+    seed: Optional[int] = None     # per-request RNG stream; None = engine's
+    greedy: bool = False           # argmax regardless of temperature
+    logit_bias: Tuple[Tuple[int, float], ...] = ()
+    stop_sequences: Tuple[Tuple[int, ...], ...] = ()
+
+    def __post_init__(self):
+        # normalize the container fields to sorted hashable tuples (a frozen
+        # dataclass must stay usable as a jit static arg / dict key, and two
+        # configs denoting the same bias must compare/hash equal regardless
+        # of pair order or dict-vs-tuple spelling)
+        bias = self.logit_bias
+        if isinstance(bias, dict):
+            bias = bias.items()
+        object.__setattr__(self, "logit_bias",
+                           tuple(sorted((int(t), float(b)) for t, b in bias)))
+        object.__setattr__(self, "stop_sequences",
+                           tuple(tuple(int(t) for t in s)
+                                 for s in self.stop_sequences if len(s)))
+
+    @property
+    def effective_temperature(self) -> float:
+        """The temperature actually dispatched: ``greedy`` pins τ=0 (every
+        backend's argmax path) regardless of ``temperature``."""
+        return 0.0 if self.greedy else self.temperature
+
+    @property
+    def seeded(self) -> bool:
+        return self.seed is not None
+
+    @property
+    def seed_u32(self) -> int:
+        """The per-request seed as the uint32 actually folded into the RNG
+        (0 when unseeded). Single source of truth for the normalization —
+        the engine's SlotParams rows and SamplingParams.broadcast must stay
+        bit-identical or the seeded-stream contract silently splits."""
+        return (self.seed or 0) & 0xFFFFFFFF
 
     @property
     def needs_penalties(self) -> bool:

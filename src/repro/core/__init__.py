@@ -1,13 +1,18 @@
 """The paper's contribution: the disaggregated decision plane.
 
 Public API:
-    DecisionPlane      — the sampling service (penalties → filter → SHVS)
-    PenaltyState       — per-sequence token histograms + masks (§2.2, Eq. 5)
-    shvs_sample        — speculative hot-vocab sampling (§5.3)
-    build_hot_set      — offline hot-vocab construction (§5.3)
-    SizingModel        — affine cost model + H* optimisation (§5.4)
+    DecisionPlane       — the sampling service shell (service API v1, §11)
+    SamplerBackend      — the pluggable backend protocol + registry
+    registered_backends / make_backend — backend discovery & construction
+    PenaltyState        — per-sequence token histograms + masks (§2.2, Eq. 5)
+    shvs_sample         — speculative hot-vocab sampling (§5.3)
+    build_hot_set       — offline hot-vocab construction (§5.3)
+    SizingModel         — affine cost model + H* optimisation (§5.4)
 """
 from repro.core.decision_plane import DecisionPlane  # noqa: F401
+from repro.core.sampler_backend import (SamplerBackend, DecisionStats,  # noqa: F401
+                                        make_backend, register_backend,
+                                        registered_backends)
 from repro.core.penalties import PenaltyState, apply_penalties, update_histograms  # noqa: F401
 from repro.core.sampling import sample_reference, truncation_first_sample  # noqa: F401
 from repro.core.shvs import shvs_sample  # noqa: F401

@@ -1,0 +1,202 @@
+"""Pluggable sampler backends — the decision-plane service API v1.
+
+SIMPLE's core claim is that sampling is a *service*: a decision plane
+disaggregated from the data plane (§1, §4.2). This module is the narrow,
+versioned contract that makes the claim concrete (DESIGN.md §11):
+
+* :class:`SamplerBackend` — the protocol. A backend is a stateless
+  logits→token draw: ``init_state`` builds the per-batch penalty state,
+  ``step(z, params, uniforms, step_idx=...)`` turns penalized logits into
+  ``(tokens, DecisionStats)``. Everything around the draw — pre-generated
+  uniforms, penalties, S1 re-sharding, histogram updates, constrained-
+  decoding masks — is owned by the service shell (`DecisionPlane`), so a
+  backend is exactly one interchangeable sampling algorithm.
+* a **registry** — backends are selected by name
+  (:func:`make_backend` / :func:`registered_backends`); an unknown name is
+  a `ValueError` listing what is registered, never a silent fall-through.
+
+Built-in backends:
+
+  ``reference``         full-V masked softmax (the baseline oracle)
+  ``truncation_first``  the paper's S2 (truncate → normalize → draw)
+  ``shvs``              S2 + S3 speculative hot-vocab sampling
+                        (registered by ``repro.core.shvs``)
+  ``gumbel``            beyond-paper single-pass Gumbel argmax fast path
+
+Contract invariants (pinned by ``tests/test_service_api.py``):
+
+* backends agree **bit-for-bit** wherever their draw rules coincide —
+  greedy rows (τ=0 / ``greedy``) and single-token supports (``top_k=1``,
+  collapsed nucleus) — across {overlapped, sequential} × {contiguous,
+  paged} engine modes;
+* elsewhere they agree **in distribution** (the TVD/exactness suites);
+* every backend consumes the same pre-generated uniforms, so each
+  backend's own stream obeys the engine's (seed, request, position)
+  determinism contract (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import penalties as pen
+from repro.core.sampling import (SamplingParams, sample_reference,
+                                 temperature_scale, truncation_first_sample)
+
+
+class DecisionStats(NamedTuple):
+    """Per-step observability emitted by every backend."""
+
+    accept_rate: jnp.ndarray     # mean fast-path acceptance
+    alpha_mean: jnp.ndarray      # mean hot-vocab mass (1 when not applicable)
+    fallback_rate: jnp.ndarray   # fraction of rows that took the full path
+
+
+class SamplerBackend:
+    """Protocol: one interchangeable sampling algorithm.
+
+    Subclasses set ``name`` (the registry key) and implement :meth:`step`.
+    Constructors are invoked by the registry with the full service
+    configuration as keyword arguments — ``vocab_size``, ``k_cap``,
+    ``seed``, ``shvs`` (an ``SHVSConfig``), ``hot_set`` — and take what
+    they need (accept ``**_`` for the rest), so new backends can add
+    knobs without touching the engine.
+    """
+
+    name: str = "abstract"
+
+    def init_state(self, batch: int, vocab_size: int, prompt_tokens=None,
+                   prompt_lens=None) -> pen.PenaltyState:
+        """Per-batch decision state (token histograms for Eq. 5)."""
+        return pen.init_state(batch, vocab_size, prompt_tokens, prompt_lens)
+
+    def step(self, z: jnp.ndarray, params: SamplingParams,
+             uniforms: jnp.ndarray, *, step_idx) -> Tuple[jnp.ndarray,
+                                                          DecisionStats]:
+        """Draw one token per row.
+
+        ``z``: penalized (NOT temperature-scaled) logits (B, V) f32.
+        ``params``: the 7-field core controls (RNG tags already stripped).
+        ``uniforms``: (B, 3) pre-generated uniforms — (accept, hot, tail)
+        draws; backends that need fewer use a fixed subset so unrelated
+        backends never contend for the same stream.
+        ``step_idx``: the global iteration index (only the ``gumbel``
+        backend keys anything on it).
+        Returns ``(tokens (B,) int32, DecisionStats)``.
+        """
+        raise NotImplementedError
+
+
+_REGISTRY: Dict[str, Callable[..., SamplerBackend]] = {}
+
+
+def register_backend(name: str):
+    """Class decorator: register a :class:`SamplerBackend` under ``name``."""
+
+    def deco(factory):
+        _REGISTRY[name] = factory
+        return factory
+
+    return deco
+
+
+def _ensure_builtin() -> None:
+    # shvs registers its backend on import; import here (not at module top)
+    # because shvs imports this module for the protocol.
+    from repro.core import shvs  # noqa: F401
+
+
+def registered_backends() -> Tuple[str, ...]:
+    """Names of every registered sampler backend, sorted."""
+    _ensure_builtin()
+    return tuple(sorted(_REGISTRY))
+
+
+def make_backend(name: str, **kwargs) -> SamplerBackend:
+    """Instantiate the backend registered under ``name``.
+
+    Raises a ``ValueError`` naming the registered backends on an unknown
+    name — the decision plane calls this on every (re)configuration, so a
+    typo'd algorithm fails loudly instead of falling through.
+    """
+    _ensure_builtin()
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown sampler backend {name!r}; registered backends: "
+            f"{', '.join(sorted(_REGISTRY))}")
+    return _REGISTRY[name](**kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Built-in backends (SHVS lives in repro.core.shvs, next to its math)
+# ---------------------------------------------------------------------------
+
+
+@register_backend("reference")
+class ReferenceBackend(SamplerBackend):
+    """Full-vocabulary masked softmax — the baseline oracle (§2.1)."""
+
+    name = "reference"
+
+    def __init__(self, **_):
+        pass
+
+    def step(self, z, params, uniforms, *, step_idx):
+        tokens = sample_reference(z, params, uniforms[:, 1])
+        stats = DecisionStats(jnp.ones(()), jnp.ones(()), jnp.zeros(()))
+        return tokens, stats
+
+
+@register_backend("truncation_first")
+class TruncationFirstBackend(SamplerBackend):
+    """The paper's S2: truncate to the filter support, then draw (§5.2)."""
+
+    name = "truncation_first"
+
+    def __init__(self, *, k_cap: int = 1024, **_):
+        self.k_cap = k_cap
+
+    def step(self, z, params, uniforms, *, step_idx):
+        res = truncation_first_sample(z, params, uniforms[:, 1],
+                                      k_cap=self.k_cap)
+        stats = DecisionStats(jnp.ones(()), jnp.ones(()),
+                              1.0 - res.exact.mean())
+        return res.tokens, stats
+
+
+@register_backend("gumbel")
+class GumbelBackend(SamplerBackend):
+    """Beyond-paper single-pass sampler: unfiltered rows draw via
+    argmax(z + Gumbel) (one HBM pass, no normalization/sort —
+    ``kernels/gumbel_kernel.py``); filtered rows take the
+    truncation-first path.
+
+    The Gumbel fast path seeds on ``(seed, step_idx)`` — reproducible
+    run-to-run but excluded from the cross-mode identity contract for
+    unfiltered stochastic rows (DESIGN.md §2).
+    """
+
+    name = "gumbel"
+
+    def __init__(self, *, k_cap: int = 1024, seed: int = 0, **_):
+        self.k_cap = k_cap
+        self.seed = seed
+
+    def step(self, z, params, uniforms, *, step_idx):
+        from repro.kernels.ref import gumbel_argmax_ref
+        zs = temperature_scale(z, params.temperature)
+        seed32 = jnp.asarray(self.seed, jnp.int32) * 1000003 + \
+            jnp.asarray(step_idx, jnp.int32)
+        fast = gumbel_argmax_ref(zs, seed32)
+        res = truncation_first_sample(z, params, uniforms[:, 1],
+                                      k_cap=self.k_cap)
+        has_filter = (params.top_k > 0) | (params.top_p < 1.0) | \
+            (params.min_p > 0.0)
+        greedy = jnp.argmax(zs, axis=-1).astype(jnp.int32)
+        tokens = jnp.where(params.temperature <= 0.0, greedy,
+                           jnp.where(has_filter, res.tokens, fast))
+        stats = DecisionStats((~has_filter).mean(), jnp.ones(()),
+                              (has_filter & ~res.exact).mean())
+        return tokens, stats

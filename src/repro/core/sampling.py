@@ -30,7 +30,19 @@ NEG_INF = -1e30
 
 
 class SamplingParams(NamedTuple):
-    """Per-row sampling controls (all (B,) arrays)."""
+    """Per-row sampling controls (all (B,) arrays).
+
+    The seven core fields are what sampler backends consume. ``seed`` /
+    ``use_seed`` are RNG tags consumed by the decision plane's uniform draw
+    (``DecisionPlane.uniforms_tagged``): a row with ``use_seed`` draws its
+    uniforms from ``PRNGKey(seed)`` keyed only on output position, making
+    its token stream a pure function of (seed, logits, params) — the
+    per-request seeding contract of the service API (DESIGN.md §11). They
+    default to ``None`` (empty pytree nodes) so the 7-field core structure
+    — and every sharding spec built against it — is unchanged; callers that
+    thread seeds strip them before handing params to a backend
+    (:meth:`strip_rng`).
+    """
 
     temperature: jnp.ndarray     # f32; 0 => greedy
     top_k: jnp.ndarray           # int32; 0 disables
@@ -39,19 +51,30 @@ class SamplingParams(NamedTuple):
     repetition_penalty: jnp.ndarray
     presence_penalty: jnp.ndarray
     frequency_penalty: jnp.ndarray
+    seed: Optional[jnp.ndarray] = None       # uint32; per-request RNG seed
+    use_seed: Optional[jnp.ndarray] = None   # bool; row draws its own stream
 
     @staticmethod
     def broadcast(batch: int, cfg) -> "SamplingParams":
         f = lambda v: jnp.full((batch,), v, jnp.float32)
+        temperature = getattr(cfg, "effective_temperature", cfg.temperature)
+        seeded = bool(getattr(cfg, "seeded", False))
         return SamplingParams(
-            temperature=f(cfg.temperature),
+            temperature=f(temperature),
             top_k=jnp.full((batch,), cfg.top_k, jnp.int32),
             top_p=f(cfg.top_p),
             min_p=f(cfg.min_p),
             repetition_penalty=f(cfg.repetition_penalty),
             presence_penalty=f(cfg.presence_penalty),
             frequency_penalty=f(cfg.frequency_penalty),
+            seed=jnp.full((batch,), getattr(cfg, "seed_u32", 0), jnp.uint32),
+            use_seed=jnp.full((batch,), seeded, bool),
         )
+
+    def strip_rng(self) -> "SamplingParams":
+        """Drop the RNG-tag fields (already consumed by the uniform draw) so
+        downstream pytrees keep the 7-field core structure."""
+        return self._replace(seed=None, use_seed=None)
 
 
 def temperature_scale(z: jnp.ndarray, temperature: jnp.ndarray) -> jnp.ndarray:

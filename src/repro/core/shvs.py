@@ -29,6 +29,8 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.sampler_backend import (DecisionStats, SamplerBackend,
+                                        register_backend)
 from repro.core.sampling import (SamplingParams, TruncResult, _inverse_cdf_draw,
                                  temperature_scale, truncation_first_sample)
 
@@ -162,3 +164,33 @@ def shvs_sample(z: jnp.ndarray, params: SamplingParams, hot: HotSet,
     return SHVSResult(tokens=tokens.astype(jnp.int32), accepted=accepted,
                       alpha=alpha, exact_fast=exact_fast,
                       needs_reference=needs_reference)
+
+
+@register_backend("shvs")
+class SHVSBackend(SamplerBackend):
+    """S2 + S3 — the full SIMPLE decision plane as a sampler backend.
+
+    Registered here (not in ``sampler_backend``) so the backend lives next
+    to the math it wraps. ``hot_set`` defaults to a contiguous low-id set
+    sized by the SHVS config (tokenizers assign low ids to frequent
+    tokens); real deployments pass a trace-built set.
+    """
+
+    name = "shvs"
+
+    def __init__(self, *, vocab_size: int, k_cap: int = 1024, shvs=None,
+                 hot_set: Optional[HotSet] = None, **_):
+        if hot_set is None:
+            from repro.config import SHVSConfig
+            cfg = shvs if shvs is not None else SHVSConfig()
+            H = cfg.resolve_hot_size(vocab_size)
+            hot_set = make_hot_set(jnp.arange(H, dtype=jnp.int32), vocab_size)
+        self.hot_set = hot_set
+        self.k_cap = k_cap
+
+    def step(self, z, params, uniforms, *, step_idx):
+        res = shvs_sample(z, params, self.hot_set, uniforms[:, 0],
+                          uniforms[:, 1], uniforms[:, 2], k_cap=self.k_cap)
+        stats = DecisionStats(res.accepted.mean(), res.alpha.mean(),
+                              (~res.exact_fast).mean())
+        return res.tokens, stats

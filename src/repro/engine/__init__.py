@@ -1,3 +1,4 @@
 """Serving substrate: requests, continuous-batching scheduler, engine."""
 from repro.engine.request import Request, RequestState  # noqa: F401
-from repro.engine.engine import Engine, EngineConfig  # noqa: F401
+from repro.engine.engine import (Engine, EngineConfig,  # noqa: F401
+                                 GenerationEvent, SlotParams)

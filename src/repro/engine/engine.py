@@ -38,6 +38,15 @@ Decode and chunked prefill run the same jitted programs over gathered
 block views, so token streams stay bit-identical to the contiguous cache
 in every overlap/prefill mode (tests/test_paged_engine.py).
 
+**Service API v1** (DESIGN.md §11). The decision plane is a service behind
+the ``SamplerBackend`` registry — the engine speaks only the protocol
+(``EngineConfig.algorithm`` names a registered backend; unknown names raise
+a ``ValueError`` listing the registry). The per-request contract
+(``SamplingConfig``: seed / greedy / logit_bias / stop_sequences) lives in
+per-slot :class:`SlotParams` rows threaded into every jitted program, and
+clients stream results through :meth:`Engine.generate`, which yields
+``(request_id, token, finish_reason)`` events at **commit** time.
+
 The engine is deliberately token-only (dense/moe/ssm/hybrid archs); the
 multimodal frontends are exercised by the dry-run and smoke tests.
 """
@@ -87,6 +96,23 @@ def _bucket(n: int, mult: int) -> int:
     return max(mult, ((n + mult - 1) // mult) * mult)
 
 
+@dataclass(frozen=True)
+class GenerationEvent:
+    """One streamed output item from :meth:`Engine.generate`.
+
+    ``token`` is ``None`` only on a terminal event that carries a
+    ``finish_reason`` without a new token (e.g. a request truncated at KV
+    capacity after its last committed token had already streamed).
+    ``finish_reason`` is set on each request's final event and ``None``
+    before that (``eos | length | stop | truncated``,
+    ``Request.finish_reason``).
+    """
+
+    request_id: int
+    token: Optional[int]
+    finish_reason: Optional[str] = None
+
+
 @dataclass
 class _Pending:
     """One dispatched-but-uncommitted device result (DESIGN.md §2)."""
@@ -131,7 +157,7 @@ class Engine:
         self._paged = engine_cfg.cache == "paged"
         assert engine_cfg.cache in ("contiguous", "paged"), engine_cfg.cache
         B, S = engine_cfg.max_batch, engine_cfg.max_seq_len
-        kv_gate = on_free = None
+        kv_gate = None
         if self._paged:
             assert (model_cfg.family in ("dense", "moe")
                     and not model_cfg.is_encdec
@@ -151,13 +177,13 @@ class Engine:
             # host mirror of each slot's dispatch-time cache length (device
             # `len` is a future under the overlapped loop)
             self._slot_len = np.zeros((B,), np.int64)
-            kv_gate, on_free = self._kv_gate, self._on_slot_free
+            kv_gate = self._kv_gate
         self.scheduler = Scheduler(
             engine_cfg.max_batch, prompt_chunk=chunk,
             priority_admission=engine_cfg.priority_admission,
             max_admission_wait=engine_cfg.max_admission_wait,
             max_prompt=max(chunk, engine_cfg.max_seq_len - chunk),
-            kv_gate=kv_gate, on_free=on_free)
+            kv_gate=kv_gate, on_free=self._on_slot_free)
         self.decision = DecisionPlane(
             model_cfg.vocab_size, algorithm=engine_cfg.algorithm,
             shvs=engine_cfg.shvs, hot_set=hot_set,
@@ -168,7 +194,7 @@ class Engine:
                       if self._paged else self.model.init_cache(B, S))
         self.pstate = self.decision.init_state(B)
         self.last_tokens = jnp.zeros((B,), jnp.int32)
-        self._sp = _SamplingParamStore(B)
+        self._sp = SlotParams(B, model_cfg.vocab_size)
         # per-slot RNG tags: request nonce + next output position (host-side;
         # activity is decided by the scheduler, so no device sync is needed)
         self._nonce = np.zeros((B,), np.uint32)
@@ -197,7 +223,7 @@ class Engine:
         self._chunk_jit = jax.jit(self._chunk_impl, donate_argnums=donate)
 
     # -- jitted bodies ---------------------------------------------------------
-    def _decode_impl(self, params, cache, pstate, last_tokens, sparams,
+    def _decode_impl(self, params, cache, pstate, last_tokens, sparams, bias,
                      nonces, pos, step, active):
         lens0 = cache["len"]
         logits, cache = self.model.decode_step(params, last_tokens, cache)
@@ -207,7 +233,7 @@ class Engine:
         cache["len"] = jnp.where(active, lens0 + 1, lens0)
         tokens, pstate, stats = self.decision.step(
             logits, pstate, sparams, step, active=active,
-            rng_tags=(nonces, pos))
+            rng_tags=(nonces, pos), logit_bias=bias)
         tokens = jnp.where(active, tokens, 0)
         return tokens, cache, pstate, stats
 
@@ -222,14 +248,15 @@ class Engine:
         return logits, cache, pstate
 
     def _chunk_impl(self, params, cache, pstate, toks, counts, mask, finish,
-                    sparams, nonces, last_tokens, step):
+                    sparams, bias, nonces, last_tokens, step):
         """One prompt chunk for every mid-prefill row; rows finishing their
         prompt sample their first token (position 0) in the same program."""
         logits, cache = self.model.prefill_chunk(params, toks, cache,
                                                  counts, mask)
         tokens, pstate, _ = self.decision.step(
             logits, pstate, sparams, step, active=finish,
-            rng_tags=(nonces, jnp.zeros_like(nonces, jnp.int32)))
+            rng_tags=(nonces, jnp.zeros_like(nonces, jnp.int32)),
+            logit_bias=bias)
         tokens = jnp.where(finish, tokens, 0)
         last_tokens = jnp.where(finish, tokens, last_tokens)
         return tokens, last_tokens, cache, pstate
@@ -251,8 +278,13 @@ class Engine:
         return self._blocks_for(req) <= self.alloc.num_free - reserved
 
     def _on_slot_free(self, slot: int, req: Request) -> None:
-        self.alloc.release(slot)
-        self._slot_len[slot] = 0
+        """A slot gave up its claim (retire or preemption): reset its
+        sampling-contract row so nothing stale can be dispatched for the
+        slot's next occupant, and release its KV blocks (paged mode)."""
+        self._sp.reset_row(slot)
+        if self._paged:
+            self.alloc.release(slot)
+            self._slot_len[slot] = 0
 
     def _push_block_table(self) -> None:
         """Upload the host allocator's block table to the device cache."""
@@ -407,7 +439,8 @@ class Engine:
             # engine mutating _nonce/_pos after dispatch
             tokens, self.cache, self.pstate, stats = self._decode_jit(
                 self.params, self.cache, self.pstate, self.last_tokens,
-                sparams, jnp.asarray(self._nonce.copy()),
+                sparams, self._sp.bias_array(),
+                jnp.asarray(self._nonce.copy()),
                 jnp.asarray(self._pos.copy()),
                 jnp.asarray(plan.step, jnp.int32), active)
             self.last_tokens = tokens
@@ -440,6 +473,64 @@ class Engine:
             steps += 1
         self.flush()
         return self.scheduler.finished
+
+    def generate(self, requests: List[Request], max_steps: int = 10_000):
+        """Submit ``requests`` and stream :class:`GenerationEvent` items as
+        their tokens are generated — the client surface of the service API
+        (DESIGN.md §11).
+
+        Overlap-aware: an event fires when its token **commits** on the
+        host (one step after dispatch under the overlapped loop, §2), never
+        at dispatch — so speculative decodes that get rolled back are never
+        observable. The stream is incremental (the first event arrives
+        while later requests are still decoding) and, collected per
+        request, bit-identical to the ``submit()`` + ``run()`` path: both
+        are views of the same committed token streams. Each request's final
+        event carries its ``finish_reason``. Raises ``RuntimeError`` if
+        ``max_steps`` is exhausted with requests still open — the stream
+        never just stops mid-request.
+        """
+        requests = list(requests)
+        if not requests:
+            return
+        self.submit(requests)
+        emitted = [0] * len(requests)
+        closed = [False] * len(requests)
+
+        def drain():
+            for i, r in enumerate(requests):
+                if closed[i]:
+                    continue
+                while emitted[i] < len(r.output):
+                    tok = r.output[emitted[i]]
+                    emitted[i] += 1
+                    fin = r.finish_reason \
+                        if emitted[i] == len(r.output) else None
+                    if fin is not None:
+                        closed[i] = True
+                    yield GenerationEvent(r.request_id, tok, fin)
+                if not closed[i] and r.finish_reason is not None:
+                    # finished without a fresh token (e.g. truncated at KV
+                    # capacity): terminal marker event, token=None
+                    closed[i] = True
+                    yield GenerationEvent(r.request_id, None, r.finish_reason)
+
+        steps = 0
+        while not all(closed) and steps < max_steps and \
+                (self.scheduler.has_work or self._pending):
+            self.step()
+            steps += 1
+            yield from drain()
+        self.flush()
+        yield from drain()
+        if not all(closed):
+            # never end the stream silently mid-request: a client must be
+            # able to distinguish completion from the step cap
+            open_ids = [r.request_id for i, r in enumerate(requests)
+                        if not closed[i]]
+            raise RuntimeError(
+                f"generate() hit max_steps={max_steps} with requests still "
+                f"unfinished: {open_ids}")
 
     # -- commit ----------------------------------------------------------------
     def _drain_one(self) -> Optional[dict]:
@@ -513,13 +604,14 @@ class Engine:
                 output_counts=rows_pstate.output_counts.at[i].set(
                     pen.histogram(oo, V)[0]))
         # first sampled token (output position `bases`, 0 for fresh rows)
-        sp_rows = _SamplingParamStore(P)
+        sp_rows = SlotParams(P, V)
         for i, r in enumerate(new_requests):
             sp_rows.set_row(i, r.sampling)
         first, rows_pstate, _ = self.decision.step(
             logits, rows_pstate, sp_rows.as_params(),
             jnp.asarray(self.scheduler.step, jnp.int32),
-            rng_tags=(jnp.asarray(rids), jnp.asarray(bases)))
+            rng_tags=(jnp.asarray(rids), jnp.asarray(bases)),
+            logit_bias=sp_rows.bias_array())
         # insert rows into batch state (device-side, chains off any
         # still-running decode through the donated cache/pstate futures)
         if self._paged:
@@ -647,7 +739,8 @@ class Engine:
         first, self.last_tokens, self.cache, self.pstate = self._chunk_jit(
             self.params, self.cache, self.pstate, jnp.asarray(toks),
             jnp.asarray(counts), jnp.asarray(mask), jnp.asarray(finish),
-            self._sp.as_params(), jnp.asarray(self._nonce.copy()),
+            self._sp.as_params(), self._sp.bias_array(),
+            jnp.asarray(self._nonce.copy()),
             self.last_tokens, jnp.asarray(self.scheduler.step, jnp.int32))
         if self._paged:
             for task in chunks:
@@ -676,11 +769,24 @@ def _insert_rows(batch_cache, rows_cache, slots):
     return out
 
 
-class _SamplingParamStore:
-    """Per-slot sampling parameters as numpy arrays -> SamplingParams.
-    The device-side struct is cached and only rebuilt after a row changes."""
+class SlotParams:
+    """Per-slot sampling contract rows as numpy arrays -> SamplingParams.
 
-    def __init__(self, batch: int):
+    One row per batch slot, carrying the full per-request contract
+    (DESIGN.md §11): the 7 core controls (``greedy`` is realized as
+    temperature 0 — every backend's τ=0 path), the per-request RNG seed
+    tags, and the sparse logit-bias rows. The device-side structs are
+    cached and only rebuilt after a row changes; every lifecycle edge that
+    can reassign a slot must go through :meth:`set_row` (admission/resume)
+    or :meth:`reset_row` (retire/preempt via the engine's slot-free hook),
+    both of which invalidate the cache — so a stale cached row can never be
+    dispatched for a slot's next occupant
+    (``tests/test_service_api.py::test_slot_reuse_never_dispatches_stale_params``).
+    """
+
+    def __init__(self, batch: int, vocab_size: int):
+        self.batch = batch
+        self.vocab_size = vocab_size
         self.temperature = np.ones(batch, np.float32)
         self.top_k = np.zeros(batch, np.int32)
         self.top_p = np.ones(batch, np.float32)
@@ -688,17 +794,42 @@ class _SamplingParamStore:
         self.repetition = np.ones(batch, np.float32)
         self.presence = np.zeros(batch, np.float32)
         self.frequency = np.zeros(batch, np.float32)
+        self.seed = np.zeros(batch, np.uint32)
+        self.use_seed = np.zeros(batch, bool)
+        # dense (B, V) bias rows, allocated on first use and updated
+        # row-wise — never rebuilt from scratch on the scheduling hot path.
+        # Sticky: once any request used logit_bias, keep passing the dense
+        # operand so the jitted program signature stops flip-flopping
+        # (zero rows are exact no-ops on the logits).
+        self._bias_dense: Optional[np.ndarray] = None
         self._cached: Optional[SamplingParams] = None
+        self._bias_cached: Optional[jnp.ndarray] = None
 
     def set_row(self, i: int, cfg: SamplingConfig) -> None:
-        self.temperature[i] = cfg.temperature
+        self.temperature[i] = cfg.effective_temperature
         self.top_k[i] = cfg.top_k
         self.top_p[i] = cfg.top_p
         self.min_p[i] = cfg.min_p
         self.repetition[i] = cfg.repetition_penalty
         self.presence[i] = cfg.presence_penalty
         self.frequency[i] = cfg.frequency_penalty
+        self.seed[i] = np.uint32(cfg.seed_u32)
+        self.use_seed[i] = cfg.seeded
+        if cfg.logit_bias and self._bias_dense is None:
+            self._bias_dense = np.zeros((self.batch, self.vocab_size),
+                                        np.float32)
+        if self._bias_dense is not None:
+            self._bias_dense[i] = 0.0
+            for t, b in cfg.logit_bias:
+                if 0 <= t < self.vocab_size:
+                    self._bias_dense[i, t] += b
+            self._bias_cached = None
         self._cached = None
+
+    def reset_row(self, i: int) -> None:
+        """Return row ``i`` to the default contract when its slot frees
+        (retire/preempt) so nothing stale survives into the next occupant."""
+        self.set_row(i, SamplingConfig())
 
     def as_params(self) -> SamplingParams:
         if self._cached is None:
@@ -713,5 +844,17 @@ class _SamplingParamStore:
                 repetition_penalty=jnp.asarray(self.repetition.copy()),
                 presence_penalty=jnp.asarray(self.presence.copy()),
                 frequency_penalty=jnp.asarray(self.frequency.copy()),
+                seed=jnp.asarray(self.seed.copy()),
+                use_seed=jnp.asarray(self.use_seed.copy()),
             )
         return self._cached
+
+    def bias_array(self) -> Optional[jnp.ndarray]:
+        """Dense (B, V) logit-bias operand, or None while no request has
+        ever used logit_bias (the jitted programs then skip the add)."""
+        if self._bias_dense is None:
+            return None
+        if self._bias_cached is None:
+            # .copy() for the same aliasing reason as as_params()
+            self._bias_cached = jnp.asarray(self._bias_dense.copy())
+        return self._bias_cached

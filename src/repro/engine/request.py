@@ -63,8 +63,33 @@ class Request:
     def done(self) -> bool:
         return self.state == RequestState.FINISHED
 
+    @property
+    def finish_reason(self) -> Optional[str]:
+        """Why the request is (or is about to be) finished — the single
+        stop-condition oracle of the service API (DESIGN.md §11); ``None``
+        while generation should continue.
+
+          "truncated"  stopped at KV-cache capacity (paged decode, §9)
+          "eos"        last committed token is the request's eos token
+          "stop"       committed output ends with one of
+                       ``sampling.stop_sequences`` (token-level match over
+                       output only; matched tokens stay in ``output``)
+          "length"     ``max_new_tokens`` committed
+        """
+        if self.truncated:
+            return "truncated"
+        if self.output:
+            if self.eos_token is not None and \
+                    self.output[-1] == self.eos_token:
+                return "eos"
+            for seq in self.sampling.stop_sequences:
+                n = len(seq)
+                if n and len(self.output) >= n and \
+                        tuple(self.output[-n:]) == seq:
+                    return "stop"
+        if len(self.output) >= self.max_new_tokens:
+            return "length"
+        return None
+
     def should_stop(self) -> bool:
-        if self.truncated or len(self.output) >= self.max_new_tokens:
-            return True
-        return (self.eos_token is not None and self.output and
-                self.output[-1] == self.eos_token)
+        return self.finish_reason is not None

@@ -76,8 +76,10 @@ class Scheduler:
         (DESIGN.md §9) — a request enters a free slot only if the KV pool
         can cover its worst case; candidates that do not fit are skipped
         (not head-of-line blocking) and retried every round. ``on_free``
-        fires whenever a slot gives up its KV claim (retire or preemption)
-        so the engine can release the slot's blocks."""
+        fires whenever a slot gives up its claim (retire or preemption) so
+        the engine can release the slot's KV blocks and reset its
+        sampling-contract row (stale ``SlotParams`` must never survive into
+        the slot's next occupant)."""
         self.num_slots = num_slots
         self.prompt_chunk = prompt_chunk
         self.priority_admission = priority_admission
@@ -236,6 +238,9 @@ class Scheduler:
         step later, when the slot may already hold a different request.
         Tokens for requests that had already satisfied their stop condition
         are dropped (rollback of the speculative decode, DESIGN.md §2).
+        The guard is ``Request.should_stop`` = ``finish_reason is not None``,
+        so every stop class — eos, length, token-level stop sequences,
+        truncation — rolls back its speculative decode the same way.
         """
         for i, req in enumerate(slot_request):
             if req is None or not active[i] or req.should_stop():

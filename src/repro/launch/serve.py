@@ -3,6 +3,11 @@
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --reduced \
         --requests 16 --max-new 24
 
+The driver is a plain client of the decision-plane service API (DESIGN.md
+§11): it streams tokens through ``Engine.generate()`` — events fire as
+tokens *commit*, one step behind dispatch under the overlapped loop — and
+reports each request's ``finish_reason`` at the end.
+
 Engine execution mode (DESIGN.md §2/§8/§9):
 
     --overlap / --no-overlap    double-buffered vs synchronous iteration loop
@@ -11,6 +16,14 @@ Engine execution mode (DESIGN.md §2/§8/§9):
     --cache paged               block-pool KV cache (vLLM-style paging)
     --block-size N              tokens per KV block (paged)
     --num-blocks N              pool size; 0 = memory-equal to contiguous
+
+Per-request sampling contract (DESIGN.md §11):
+
+    --algorithm NAME            any registered sampler backend
+    --seed N                    per-request sampling seeds (request i gets
+                                N+i; streams are pure functions of the seed)
+    --greedy                    argmax decoding for every request
+    --stop 5,9 [--stop 7]       token-level stop sequences (repeatable)
 """
 from __future__ import annotations
 
@@ -21,6 +34,7 @@ import jax
 import numpy as np
 
 from repro.config import ARCH_IDS, SamplingConfig, SHVSConfig, get_arch
+from repro.core.sampler_backend import registered_backends
 from repro.engine import Engine, Request
 from repro.engine.engine import EngineConfig
 from repro.models.model import Model
@@ -45,9 +59,10 @@ def build_engine(arch: str, reduced: bool, algorithm: str, batch: int,
     return Engine(cfg, params, ecfg)
 
 
-def synth_requests(n: int, vocab: int, max_new: int, seed: int = 0,
-                   long_prompts: bool = False):
-    rng = np.random.default_rng(seed)
+def synth_requests(n: int, vocab: int, max_new: int, rng_seed: int = 0,
+                   long_prompts: bool = False, seed=None, greedy: bool = False,
+                   stop_sequences=()):
+    rng = np.random.default_rng(rng_seed)
     reqs = []
     for i in range(n):
         if long_prompts and i % 4 == 0:
@@ -59,7 +74,10 @@ def synth_requests(n: int, vocab: int, max_new: int, seed: int = 0,
             prompt=rng.integers(1, vocab, plen).tolist(),
             max_new_tokens=max_new,
             sampling=SamplingConfig(temperature=0.8, top_k=40, top_p=0.95,
-                                    repetition_penalty=1.1, seed=seed),
+                                    repetition_penalty=1.1,
+                                    seed=None if seed is None else seed + i,
+                                    greedy=greedy,
+                                    stop_sequences=tuple(stop_sequences)),
         ))
     return reqs
 
@@ -70,7 +88,8 @@ def main() -> None:
     ap.add_argument("--reduced", action="store_true",
                     help="use the reduced smoke-size config (CPU-friendly)")
     ap.add_argument("--algorithm", default="shvs",
-                    choices=("shvs", "truncation_first", "reference"))
+                    choices=registered_backends(),
+                    help="sampler backend (decision-plane service registry)")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--batch", type=int, default=8)
@@ -90,20 +109,38 @@ def main() -> None:
                     help="tokens per KV block (paged cache)")
     ap.add_argument("--num-blocks", type=int, default=0,
                     help="paged pool size; 0 = memory-equal to contiguous")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="per-request sampling seeds (request i uses seed+i); "
+                         "token streams become pure functions of the seed")
+    ap.add_argument("--greedy", action="store_true",
+                    help="argmax decoding for every request")
+    ap.add_argument("--stop", action="append", default=[],
+                    metavar="IDS",
+                    help="token-level stop sequence as comma-separated ids; "
+                         "repeatable (finish_reason becomes 'stop')")
     args = ap.parse_args()
 
+    stop_sequences = tuple(
+        tuple(int(t) for t in s.split(",") if t.strip()) for s in args.stop)
     eng = build_engine(args.arch, args.reduced, args.algorithm, args.batch,
                        args.max_seq, overlap=args.overlap,
                        prompt_chunk=args.prompt_chunk, cache=args.cache,
                        block_size=args.block_size, num_blocks=args.num_blocks)
     reqs = synth_requests(args.requests, eng.cfg.vocab_size, args.max_new,
-                          long_prompts=args.long_prompts)
-    eng.submit(reqs)
+                          long_prompts=args.long_prompts, seed=args.seed,
+                          greedy=args.greedy, stop_sequences=stop_sequences)
     t0 = time.perf_counter()
     for r in reqs:
         r.arrival_time = t0
-    done = eng.run()
+    # stream through the service surface: events fire at commit
+    n_events = 0
+    first_event_at = None
+    for ev in eng.generate(reqs):
+        if first_event_at is None and ev.token is not None:
+            first_event_at = time.perf_counter()
+        n_events += 1
     dt = time.perf_counter() - t0
+    done = reqs
     toks = sum(len(r.output) for r in done)
     mode = "overlapped" if args.overlap else "sequential"
     chunk = f", prompt_chunk={args.prompt_chunk}" if args.prompt_chunk else ""
@@ -113,7 +150,15 @@ def main() -> None:
               f"pool={eng.pcfg.num_blocks} "
               f"preemptions={eng.scheduler.preemptions}")
     print(f"\nserved {len(done)} requests, {toks} tokens in {dt:.2f}s "
-          f"({toks / dt:.1f} tok/s) [{mode}{chunk}{kv}]")
+          f"({toks / dt:.1f} tok/s) [{args.algorithm}, {mode}{chunk}{kv}]")
+    if first_event_at is not None:
+        print(f"first streamed event after {(first_event_at - t0) * 1e3:.1f}ms "
+              f"({n_events} events)")
+    print("per-request finish reasons:")
+    for r in sorted(done, key=lambda r: r.request_id):
+        seed_s = "-" if r.sampling.seed is None else str(r.sampling.seed)
+        print(f"  req {r.request_id:3d}: {len(r.output):3d} tokens, "
+              f"seed={seed_s:>4s}, finish_reason={r.finish_reason}")
     tpot = []
     ttft = []
     for r in done:
