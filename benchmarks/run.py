@@ -17,6 +17,8 @@ from benchmarks.common import emit
 MODULES = [
     ("fig1", "benchmarks.fig1_sampling_ratio", "Fig 1a: sampling ratio vs TP"),
     ("pipeline", "benchmarks.pipeline_sim", "Fig 1b/§3: pipeline bubbles"),
+    ("fig_pipeline", "benchmarks.fig_pipeline",
+     "Executable pipeline engine: measured baseline-vs-SIMPLE bubbles"),
     ("fig3", "benchmarks.fig3_throughput", "Fig 3: end-to-end throughput"),
     ("fig5", "benchmarks.fig_latency_ecdf", "Fig 4/5/7: TPOT P95"),
     ("fig6", "benchmarks.fig6_load_latency", "Fig 6: load-latency"),

@@ -1,0 +1,170 @@
+"""Host-side sampler worker pool — the disaggregated decision plane for the
+pipeline-parallel engine (DESIGN.md §12).
+
+The paper's structural claim (§1, Eq. 4) is that sampling neither expands
+with TP nor balances across PP stages: executed on the last stage's
+accelerator it caps the pipeline frequency, idling every other stage for
+``t_sampling`` each cycle. SIMPLE moves the draw to a *pool of host
+samplers*: last-stage logits are ``device_get``'d and ``m`` CPU workers run
+**sequence-parallel shards** (mechanism S1 applied across workers — each
+worker owns a contiguous slice of the microbatch's rows, the vocabulary
+replicated per shard) through the existing
+:class:`~repro.core.decision_plane.DecisionPlane`, so every registered
+:class:`~repro.core.sampler_backend.SamplerBackend` works unchanged.
+
+Determinism: each row's uniforms come from the plane's counter-based
+(request, position) keys and every other per-row computation — penalties,
+filtering, the backend draw, the Eq. 5 histogram update — is row-local, so
+the sampled stream is bit-identical for 1 worker or 64, and to the
+single-stage engine's fused on-device decision (pinned by
+``tests/test_pipeline_engine.py``).
+
+The pool is deliberately synchronous-free on the submit path: ``submit``
+returns a :class:`SampleTicket` immediately and the caller blocks only in
+:meth:`SampleTicket.result` — which the pipeline engine calls when the
+microbatch re-enters stage 1, ``(M − p)`` cycles later. The measured block
+time is exactly the paper's "sampler pool too slow for the slack" stall.
+"""
+from __future__ import annotations
+
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import penalties as pen
+from repro.core.decision_plane import DecisionPlane
+
+
+class PoolResult(NamedTuple):
+    """One microbatch's assembled sampling outcome."""
+
+    tokens: np.ndarray           # (R,) int32; inactive rows are 0
+    state: pen.PenaltyState      # updated (R, V) histogram rows
+    accept_rate: float
+    alpha_mean: float
+    fallback_rate: float
+    sampler_time: float          # max worker wall time (s) — the pool's
+    #                              critical path for this microbatch
+
+
+def _shard_bounds(rows: int, workers: int) -> List[tuple]:
+    """Contiguous row ranges: ``min(workers, rows)`` near-equal shards —
+    the same balanced partition as the pipeline's layer split."""
+    from repro.models.transformer import stage_bounds
+    return stage_bounds(rows, max(1, min(workers, rows)))
+
+
+class SampleTicket:
+    """Pending sampled tokens for one microbatch (one future per shard).
+
+    ``result()`` blocks until every shard worker finishes and assembles the
+    full-microbatch :class:`PoolResult`; ``done`` is a non-blocking probe.
+    """
+
+    def __init__(self, futures: List[Future], widths: List[int]):
+        self._futures = futures
+        self._widths = widths
+
+    @property
+    def done(self) -> bool:
+        return all(f.done() for f in self._futures)
+
+    def result(self) -> PoolResult:
+        parts = [f.result() for f in self._futures]
+        tokens = np.concatenate([p[0] for p in parts])
+        state = pen.PenaltyState(
+            prompt_counts=jnp.concatenate(
+                [p[1].prompt_counts for p in parts]),
+            output_counts=jnp.concatenate(
+                [p[1].output_counts for p in parts]))
+        total = float(sum(self._widths))
+        wmean = lambda idx: float(sum(
+            w * float(p[2][idx]) for w, p in zip(self._widths, parts)) / total)
+        return PoolResult(tokens=tokens, state=state,
+                          accept_rate=wmean(0), alpha_mean=wmean(1),
+                          fallback_rate=wmean(2),
+                          sampler_time=max(p[3] for p in parts))
+
+
+class HostSamplerPool:
+    """``m`` CPU sampler workers behind the decision-plane service.
+
+    ``submit`` shards a microbatch's rows across the workers
+    (sequence-parallel, S1) and returns a ticket; ``sample_sync`` runs the
+    identical math full-width on the calling thread — the pipeline
+    engine's ``baseline`` mode (sampling synchronously on the last stage,
+    Eq. 4) and the two paths are bit-identical by construction.
+    """
+
+    def __init__(self, plane: DecisionPlane, num_workers: int = 2):
+        self.plane = plane
+        self.num_workers = max(1, num_workers)
+        self._ex: Optional[ThreadPoolExecutor] = None
+
+        def _step(logits, state, params, bias, nonces, pos, step, active):
+            tokens, state, stats = plane.step(
+                logits, state, params, step, active=active,
+                rng_tags=(nonces, pos), logit_bias=bias)
+            tokens = jnp.where(active, tokens, 0)
+            return tokens, state, stats
+
+        self._step_jit = jax.jit(_step)
+
+    # -- worker body ---------------------------------------------------------
+    def _run_shard(self, lo: int, hi: int, logits, state, params, bias,
+                   nonces, pos, step, active):
+        t0 = time.perf_counter()
+        # the disaggregation boundary: logits cross to the host explicitly
+        shard = jnp.asarray(jax.device_get(logits[lo:hi]))
+        sl = lambda a: None if a is None else a[lo:hi]
+        tokens, new_state, stats = self._step_jit(
+            shard,
+            jax.tree_util.tree_map(sl, state),
+            jax.tree_util.tree_map(sl, params),
+            sl(bias),
+            jnp.asarray(nonces[lo:hi]), jnp.asarray(pos[lo:hi]),
+            jnp.asarray(step, jnp.int32), jnp.asarray(active[lo:hi]))
+        toks = np.asarray(tokens)        # worker-side host sync
+        stats_host = (float(stats.accept_rate), float(stats.alpha_mean),
+                      float(stats.fallback_rate))
+        return toks, new_state, stats_host, time.perf_counter() - t0
+
+    # -- client surface ------------------------------------------------------
+    def submit(self, logits, state: pen.PenaltyState, params, bias,
+               nonces: np.ndarray, pos: np.ndarray, step: int,
+               active: np.ndarray) -> SampleTicket:
+        """Dispatch one microbatch's rows to the worker shards.
+
+        ``logits``: (R, V) device array (may still be an in-flight future —
+        workers block on it, not the caller). ``nonces``/``pos``/``active``
+        are host snapshots taken at the microbatch's stage-1 dispatch.
+        """
+        if self._ex is None:
+            self._ex = ThreadPoolExecutor(
+                max_workers=self.num_workers,
+                thread_name_prefix="host-sampler")
+        bounds = _shard_bounds(logits.shape[0], self.num_workers)
+        futures = [self._ex.submit(self._run_shard, lo, hi, logits, state,
+                                   params, bias, nonces, pos, step, active)
+                   for lo, hi in bounds]
+        return SampleTicket(futures, [hi - lo for lo, hi in bounds])
+
+    def sample_sync(self, logits, state, params, bias, nonces, pos, step,
+                    active) -> PoolResult:
+        """Full-width draw on the calling thread (baseline mode): the same
+        decision program, blocking the last stage's cycle on the result."""
+        R = logits.shape[0]
+        part = self._run_shard(0, R, logits, state, params, bias, nonces,
+                               pos, step, active)
+        return PoolResult(tokens=part[0], state=part[1],
+                          accept_rate=part[2][0], alpha_mean=part[2][1],
+                          fallback_rate=part[2][2], sampler_time=part[3])
+
+    def close(self) -> None:
+        if self._ex is not None:
+            self._ex.shutdown(wait=True)
+            self._ex = None

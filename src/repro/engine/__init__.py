@@ -1,4 +1,7 @@
 """Serving substrate: requests, continuous-batching scheduler, engine."""
 from repro.engine.request import Request, RequestState  # noqa: F401
 from repro.engine.engine import (Engine, EngineConfig,  # noqa: F401
-                                 GenerationEvent, SlotParams)
+                                 GenerationEvent, SlotParams,
+                                 generate_stream)
+from repro.engine.pipeline import (MicrobatchPlanner,  # noqa: F401
+                                   PipelineConfig, PipelineEngine)

@@ -113,6 +113,114 @@ class GenerationEvent:
     finish_reason: Optional[str] = None
 
 
+def generate_stream(eng, requests: List[Request], max_steps: int = 10_000):
+    """Shared client surface behind :meth:`Engine.generate` and
+    :meth:`PipelineEngine.generate` (DESIGN.md §11/§12): submit
+    ``requests``, drive ``eng.step()`` and yield :class:`GenerationEvent`
+    items as tokens **commit** on the host. ``eng`` needs only the narrow
+    engine protocol — ``submit`` / ``step`` / ``flush`` / ``in_flight`` /
+    ``scheduler.has_work``."""
+    requests = list(requests)
+    if not requests:
+        return
+    eng.submit(requests)
+    emitted = [0] * len(requests)
+    closed = [False] * len(requests)
+
+    def drain():
+        for i, r in enumerate(requests):
+            if closed[i]:
+                continue
+            while emitted[i] < len(r.output):
+                tok = r.output[emitted[i]]
+                emitted[i] += 1
+                fin = r.finish_reason \
+                    if emitted[i] == len(r.output) else None
+                if fin is not None:
+                    closed[i] = True
+                yield GenerationEvent(r.request_id, tok, fin)
+            if not closed[i] and r.finish_reason is not None:
+                # finished without a fresh token (e.g. truncated at KV
+                # capacity): terminal marker event, token=None
+                closed[i] = True
+                yield GenerationEvent(r.request_id, None, r.finish_reason)
+
+    steps = 0
+    while not all(closed) and steps < max_steps and \
+            (eng.scheduler.has_work or eng.in_flight):
+        eng.step()
+        steps += 1
+        yield from drain()
+    eng.flush()
+    yield from drain()
+    if not all(closed):
+        # never end the stream silently mid-request: a client must be
+        # able to distinguish completion from the step cap
+        open_ids = [r.request_id for i, r in enumerate(requests)
+                    if not closed[i]]
+        raise RuntimeError(
+            f"generate() hit max_steps={max_steps} with requests still "
+            f"unfinished: {open_ids}")
+
+
+def prefill_new_rows(eng, new_requests: List[Request], step_idx: int):
+    """Shared admission math behind :meth:`Engine._admit` and
+    :meth:`PipelineEngine._admit_group` — one implementation so the
+    engines' bit-identity contract (§12) cannot drift: bucket and pad the
+    requests' contexts, run the monolithic prefill program (jit-cached per
+    ``(P, Sp)``), rebuild resumed rows' prompt/output histogram split
+    (presence/frequency penalties read C_o — Eq. 5), and sample each row's
+    first token at its resume position. ``eng`` needs ``cfg`` / ``ecfg`` /
+    ``params`` / ``decision`` / ``_prefill_cache`` / ``_prefill_impl``.
+
+    Returns ``(first, rows_cache, rows_pstate, lens, bases, rids)`` —
+    ``first`` is the (P,) device token array; the caller owns the install
+    into its batch/stage state."""
+    P = len(new_requests)
+    ctxs = [r.context_tokens() if r.output else r.prompt
+            for r in new_requests]
+    maxlen = max(len(c) for c in ctxs)
+    Sp = _bucket(maxlen, eng.ecfg.prompt_bucket)
+    Sp = min(Sp, eng.ecfg.max_seq_len)
+    toks = np.zeros((P, Sp), np.int32)
+    lens = np.zeros((P,), np.int32)
+    bases = np.zeros((P,), np.int32)   # next output position per row
+    for i, (r, c) in enumerate(zip(new_requests, ctxs)):
+        c = c[-Sp:]
+        toks[i, :len(c)] = c
+        lens[i] = len(c)
+        bases[i] = len(r.output)
+    key = (P, Sp)
+    if key not in eng._prefill_cache:
+        eng._prefill_cache[key] = jax.jit(eng._prefill_impl)
+    logits, rows_cache, rows_pstate = eng._prefill_cache[key](
+        eng.params, jnp.asarray(toks), jnp.asarray(lens))
+    rids = np.array([r.request_id for r in new_requests], np.uint32)
+    # resumed rows: the prefill batched prompt+output into one sequence,
+    # but the penalty state must keep the prompt/output split — rebuild
+    V = eng.cfg.vocab_size
+    for i, r in enumerate(new_requests):
+        if not r.output:
+            continue
+        pp = jnp.asarray(np.asarray(r.prompt, np.int32)[None, :])
+        oo = jnp.asarray(np.asarray(r.output, np.int32)[None, :])
+        rows_pstate = pen.PenaltyState(
+            prompt_counts=rows_pstate.prompt_counts.at[i].set(
+                pen.histogram(pp, V)[0]),
+            output_counts=rows_pstate.output_counts.at[i].set(
+                pen.histogram(oo, V)[0]))
+    # first sampled token (output position `bases`, 0 for fresh rows)
+    sp_rows = SlotParams(P, V)
+    for i, r in enumerate(new_requests):
+        sp_rows.set_row(i, r.sampling)
+    first, rows_pstate, _ = eng.decision.step(
+        logits, rows_pstate, sp_rows.as_params(),
+        jnp.asarray(step_idx, jnp.int32),
+        rng_tags=(jnp.asarray(rids), jnp.asarray(bases)),
+        logit_bias=sp_rows.bias_array())
+    return first, rows_cache, rows_pstate, lens, bases, rids
+
+
 @dataclass
 class _Pending:
     """One dispatched-but-uncommitted device result (DESIGN.md §2)."""
@@ -490,47 +598,7 @@ class Engine:
         ``max_steps`` is exhausted with requests still open — the stream
         never just stops mid-request.
         """
-        requests = list(requests)
-        if not requests:
-            return
-        self.submit(requests)
-        emitted = [0] * len(requests)
-        closed = [False] * len(requests)
-
-        def drain():
-            for i, r in enumerate(requests):
-                if closed[i]:
-                    continue
-                while emitted[i] < len(r.output):
-                    tok = r.output[emitted[i]]
-                    emitted[i] += 1
-                    fin = r.finish_reason \
-                        if emitted[i] == len(r.output) else None
-                    if fin is not None:
-                        closed[i] = True
-                    yield GenerationEvent(r.request_id, tok, fin)
-                if not closed[i] and r.finish_reason is not None:
-                    # finished without a fresh token (e.g. truncated at KV
-                    # capacity): terminal marker event, token=None
-                    closed[i] = True
-                    yield GenerationEvent(r.request_id, None, r.finish_reason)
-
-        steps = 0
-        while not all(closed) and steps < max_steps and \
-                (self.scheduler.has_work or self._pending):
-            self.step()
-            steps += 1
-            yield from drain()
-        self.flush()
-        yield from drain()
-        if not all(closed):
-            # never end the stream silently mid-request: a client must be
-            # able to distinguish completion from the step cap
-            open_ids = [r.request_id for i, r in enumerate(requests)
-                        if not closed[i]]
-            raise RuntimeError(
-                f"generate() hit max_steps={max_steps} with requests still "
-                f"unfinished: {open_ids}")
+        yield from generate_stream(self, requests, max_steps)
 
     # -- commit ----------------------------------------------------------------
     def _drain_one(self) -> Optional[dict]:
@@ -568,50 +636,9 @@ class Engine:
         §9) re-prefills prompt+output and samples its next token at output
         position len(output) — the (request, position) RNG keying makes the
         continuation bit-identical to the unpreempted stream."""
-        P = len(new_requests)
-        ctxs = [r.context_tokens() if r.output else r.prompt
-                for r in new_requests]
-        maxlen = max(len(c) for c in ctxs)
-        Sp = _bucket(maxlen, self.ecfg.prompt_bucket)
-        Sp = min(Sp, self.ecfg.max_seq_len)
-        toks = np.zeros((P, Sp), np.int32)
-        lens = np.zeros((P,), np.int32)
-        bases = np.zeros((P,), np.int32)   # next output position per row
-        for i, (r, c) in enumerate(zip(new_requests, ctxs)):
-            c = c[-Sp:]
-            toks[i, :len(c)] = c
-            lens[i] = len(c)
-            bases[i] = len(r.output)
-        key = (P, Sp)
-        if key not in self._prefill_cache:
-            self._prefill_cache[key] = jax.jit(self._prefill_impl)
-        logits, rows_cache, rows_pstate = self._prefill_cache[key](
-            self.params, jnp.asarray(toks), jnp.asarray(lens))
+        first, rows_cache, rows_pstate, lens, bases, rids = \
+            prefill_new_rows(self, new_requests, self.scheduler.step)
         slots = jnp.asarray([r.slot for r in new_requests], jnp.int32)
-        rids = np.array([r.request_id for r in new_requests], np.uint32)
-        # resumed rows: the prefill batched prompt+output into one sequence,
-        # but the penalty state must keep the prompt/output split (presence/
-        # frequency penalties read C_o) — rebuild their histograms
-        V = self.cfg.vocab_size
-        for i, r in enumerate(new_requests):
-            if not r.output:
-                continue
-            pp = jnp.asarray(np.asarray(r.prompt, np.int32)[None, :])
-            oo = jnp.asarray(np.asarray(r.output, np.int32)[None, :])
-            rows_pstate = pen.PenaltyState(
-                prompt_counts=rows_pstate.prompt_counts.at[i].set(
-                    pen.histogram(pp, V)[0]),
-                output_counts=rows_pstate.output_counts.at[i].set(
-                    pen.histogram(oo, V)[0]))
-        # first sampled token (output position `bases`, 0 for fresh rows)
-        sp_rows = SlotParams(P, V)
-        for i, r in enumerate(new_requests):
-            sp_rows.set_row(i, r.sampling)
-        first, rows_pstate, _ = self.decision.step(
-            logits, rows_pstate, sp_rows.as_params(),
-            jnp.asarray(self.scheduler.step, jnp.int32),
-            rng_tags=(jnp.asarray(rids), jnp.asarray(bases)),
-            logit_bias=sp_rows.bias_array())
         # insert rows into batch state (device-side, chains off any
         # still-running decode through the donated cache/pstate futures)
         if self._paged:

@@ -105,9 +105,16 @@ class Scheduler:
         return sum(s is not None for s in self.slots)
 
     # -- iteration boundary -----------------------------------------------------
-    def retire_finished(self) -> None:
-        """Free slots whose requests have committed their stop condition."""
+    def retire_finished(self, group=None) -> None:
+        """Free slots whose requests have committed their stop condition.
+
+        ``group`` (optional container of slot ids) restricts retirement to
+        those slots — the pipeline engine retires only the microbatch
+        re-entering stage 1, because other microbatches' slots may have
+        forwards in flight (DESIGN.md §12)."""
         for i, req in enumerate(self.slots):
+            if group is not None and i not in group:
+                continue
             if req is not None and req.state is RequestState.RUNNING \
                     and req.should_stop():
                 req.state = RequestState.FINISHED
@@ -152,15 +159,22 @@ class Scheduler:
             0 if self.waiting[i].prompt_len <= self.prompt_chunk else 1,
             i))
 
-    def schedule(self) -> SchedulingOutput:
-        """Retire finished requests, admit waiting ones, emit the plan."""
-        self.retire_finished()
+    def schedule(self, group=None) -> SchedulingOutput:
+        """Retire finished requests, admit waiting ones, emit the plan.
+
+        ``group`` (optional container of slot ids) makes the call
+        *microbatch-aware* (DESIGN.md §12): only the group's slots are
+        retired, admitted into, or scheduled for prompt chunks. The waiting
+        queue and priority classes stay global, so admission order across
+        microbatches is still FCFS-with-priority."""
+        self.retire_finished(group)
         # admit into free slots in priority order; with a kv_gate, a
         # candidate whose block demand does not fit is skipped this round
         # (later, smaller requests may still be admitted)
         new: List[Request] = []
         new_chunked: List[Request] = []
-        free = [i for i in range(self.num_slots) if self.slots[i] is None]
+        slot_range = range(self.num_slots) if group is None else group
+        free = [i for i in slot_range if self.slots[i] is None]
         if free and self.waiting:
             order = self._admission_order()
             admitted: set = set()
@@ -208,6 +222,8 @@ class Scheduler:
         # emit one prompt chunk per mid-prefill slot
         chunks: List[ChunkTask] = []
         for i, req in enumerate(self.slots):
+            if group is not None and i not in group:
+                continue
             if req is None or req.state is not RequestState.PREFILLING:
                 continue
             start = req.prompt_pos

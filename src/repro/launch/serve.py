@@ -8,7 +8,7 @@ The driver is a plain client of the decision-plane service API (DESIGN.md
 tokens *commit*, one step behind dispatch under the overlapped loop — and
 reports each request's ``finish_reason`` at the end.
 
-Engine execution mode (DESIGN.md §2/§8/§9):
+Engine execution mode (DESIGN.md §2/§8/§9/§12):
 
     --overlap / --no-overlap    double-buffered vs synchronous iteration loop
     --prompt-chunk N            chunked prefill width (0 = monolithic)
@@ -16,6 +16,12 @@ Engine execution mode (DESIGN.md §2/§8/§9):
     --cache paged               block-pool KV cache (vLLM-style paging)
     --block-size N              tokens per KV block (paged)
     --num-blocks N              pool size; 0 = memory-equal to contiguous
+    --stages P                  pipeline-parallel stages; P>1 runs the
+                                microbatched PipelineEngine (DESIGN.md §12)
+    --microbatches M            microbatches in flight (0 = P); batch % M = 0
+    --samplers M                host sampler pool workers (pipeline)
+    --sampler-mode MODE         disaggregated (host pool, default) or
+                                baseline (sync on the last stage, Eq. 4)
 
 Per-request sampling contract (DESIGN.md §11):
 
@@ -35,7 +41,7 @@ import numpy as np
 
 from repro.config import ARCH_IDS, SamplingConfig, SHVSConfig, get_arch
 from repro.core.sampler_backend import registered_backends
-from repro.engine import Engine, Request
+from repro.engine import Engine, PipelineConfig, PipelineEngine, Request
 from repro.engine.engine import EngineConfig
 from repro.models.model import Model
 
@@ -43,19 +49,31 @@ from repro.models.model import Model
 def build_engine(arch: str, reduced: bool, algorithm: str, batch: int,
                  max_seq: int, seed: int = 0, overlap: bool = True,
                  prompt_chunk: int = 0, cache: str = "contiguous",
-                 block_size: int = 16, num_blocks: int = 0) -> Engine:
+                 block_size: int = 16, num_blocks: int = 0,
+                 stages: int = 1, microbatches: int = 0, samplers: int = 2,
+                 sampler_mode: str = "disaggregated"):
     cfg = get_arch(arch)
     if reduced:
         cfg = cfg.reduced()
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(seed))
-    ecfg = EngineConfig(max_batch=batch, max_seq_len=max_seq,
-                        algorithm=algorithm,
-                        shvs=SHVSConfig(hot_size=min(1024, cfg.vocab_size // 4)),
-                        k_cap=min(256, cfg.vocab_size), seed=seed,
-                        overlap=overlap, prompt_chunk=prompt_chunk,
-                        cache=cache, block_size=block_size,
-                        num_blocks=num_blocks)
+    common = dict(max_batch=batch, max_seq_len=max_seq,
+                  algorithm=algorithm,
+                  shvs=SHVSConfig(hot_size=min(1024, cfg.vocab_size // 4)),
+                  k_cap=min(256, cfg.vocab_size), seed=seed,
+                  cache=cache, block_size=block_size,
+                  num_blocks=num_blocks)
+    if stages > 1 or microbatches:
+        if prompt_chunk:
+            raise ValueError(
+                "--prompt-chunk is not supported with --stages/"
+                "--microbatches: the pipeline engine prefills prompts "
+                "monolithically (DESIGN.md §12)")
+        ecfg = PipelineConfig(stages=stages, microbatches=microbatches,
+                              samplers=samplers, sampler_mode=sampler_mode,
+                              **common)
+        return PipelineEngine(cfg, params, ecfg)
+    ecfg = EngineConfig(overlap=overlap, prompt_chunk=prompt_chunk, **common)
     return Engine(cfg, params, ecfg)
 
 
@@ -109,6 +127,18 @@ def main() -> None:
                     help="tokens per KV block (paged cache)")
     ap.add_argument("--num-blocks", type=int, default=0,
                     help="paged pool size; 0 = memory-equal to contiguous")
+    ap.add_argument("--stages", type=int, default=1,
+                    help="pipeline-parallel stages; >1 runs the "
+                         "microbatched PipelineEngine (DESIGN.md §12)")
+    ap.add_argument("--microbatches", type=int, default=0,
+                    help="microbatches in flight (0 = stages); "
+                         "batch must divide into them")
+    ap.add_argument("--samplers", type=int, default=2,
+                    help="host sampler pool workers (pipeline engine)")
+    ap.add_argument("--sampler-mode", choices=("disaggregated", "baseline"),
+                    default="disaggregated",
+                    help="pipeline sampling: host pool committed at "
+                         "re-entry, or synchronous on the last stage")
     ap.add_argument("--seed", type=int, default=None,
                     help="per-request sampling seeds (request i uses seed+i); "
                          "token streams become pure functions of the seed")
@@ -125,7 +155,10 @@ def main() -> None:
     eng = build_engine(args.arch, args.reduced, args.algorithm, args.batch,
                        args.max_seq, overlap=args.overlap,
                        prompt_chunk=args.prompt_chunk, cache=args.cache,
-                       block_size=args.block_size, num_blocks=args.num_blocks)
+                       block_size=args.block_size, num_blocks=args.num_blocks,
+                       stages=args.stages, microbatches=args.microbatches,
+                       samplers=args.samplers,
+                       sampler_mode=args.sampler_mode)
     reqs = synth_requests(args.requests, eng.cfg.vocab_size, args.max_new,
                           long_prompts=args.long_prompts, seed=args.seed,
                           greedy=args.greedy, stop_sequences=stop_sequences)
@@ -142,7 +175,12 @@ def main() -> None:
     dt = time.perf_counter() - t0
     done = reqs
     toks = sum(len(r.output) for r in done)
-    mode = "overlapped" if args.overlap else "sequential"
+    pipelined = args.stages > 1 or args.microbatches
+    if pipelined:
+        mode = (f"pipeline p={eng.p} M={eng.M} "
+                f"samplers={args.samplers} ({args.sampler_mode})")
+    else:
+        mode = "overlapped" if args.overlap else "sequential"
     chunk = f", prompt_chunk={args.prompt_chunk}" if args.prompt_chunk else ""
     kv = ""
     if args.cache == "paged":
@@ -151,6 +189,16 @@ def main() -> None:
               f"preemptions={eng.scheduler.preemptions}")
     print(f"\nserved {len(done)} requests, {toks} tokens in {dt:.2f}s "
           f"({toks / dt:.1f} tok/s) [{args.algorithm}, {mode}{chunk}{kv}]")
+    if pipelined:
+        rep = eng.pipeline_report()
+        util = " ".join(f"s{s}={u:.1%}"
+                        for s, u in enumerate(rep["stage_util"]))
+        print(f"pipeline: bubble_frac={rep['bubble_frac']:.1%} over "
+              f"{rep['cycles']} steady-state cycles, "
+              f"cycle={rep['mean_cycle_ms']:.2f}ms, "
+              f"commit_stall={rep['stall_ms_mean']:.2f}ms")
+        print(f"per-stage utilization: {util}")
+        eng.close()
     if first_event_at is not None:
         print(f"first streamed event after {(first_event_at - t0) * 1e3:.1f}ms "
               f"({n_events} events)")

@@ -185,6 +185,42 @@ class Model:
                                   window=window)
         return self._logits(params, y[:, -1]), cache
 
+    def decode_stage(self, stage_params, x_or_tokens, cache, *, first: bool,
+                     last: bool, window=None):
+        """One pipeline-parallel stage of :meth:`decode_step` (DESIGN.md
+        §12). The composition over all stages is bit-identical to the
+        monolithic decode: ``lax.scan`` over a stage's layer slice chains
+        exactly like the full-depth scan, the first stage embeds, and the
+        last stage closes with final norm + LM head.
+
+        ``stage_params``: ``{"stack": sliced-stack}`` plus ``"emb"`` on the
+        first stage (input embedding) and the last (tied LM head — the
+        embedding table is replicated on both ends, as real PP deployments
+        do with tied weights). ``cache`` is the stage's layer-sliced cache.
+        Returns ``(activations (B, 1, d), cache)`` for inner stages and
+        ``(logits (B, V), cache)`` for the last. Dense/MoE full-causal
+        decoders only — the pipeline engine gates eligibility.
+        """
+        cfg = self.cfg
+        assert cfg.family in ("dense", "moe") and not cfg.is_encdec, \
+            "pipeline stages: dense/moe decoder archs only"
+        if first:
+            tokens = x_or_tokens
+            if tokens.ndim == 1:
+                tokens = tokens[:, None]
+            x, positions, _ = self._embed_inputs(
+                stage_params, {"tokens": tokens}, lens=cache["len"])
+        else:
+            x = x_or_tokens
+            positions = cache["len"][:, None] + \
+                jnp.arange(x.shape[1], dtype=jnp.int32)[None, :]
+        y, cache, _ = apply_dense_stack(
+            stage_params["stack"], x, positions, cfg, cache, "decode",
+            window=window, final_norm=last)
+        if last:
+            return self._logits(stage_params, y[:, -1]), cache
+        return y, cache
+
     # -- input specs for the dry-run -------------------------------------------
     def input_specs(self, batch: int, seq_len: int, kind: str):
         """ShapeDtypeStruct stand-ins for every model input (no allocation)."""

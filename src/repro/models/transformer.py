@@ -83,6 +83,44 @@ def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
     return cache
 
 
+def stage_bounds(num_layers: int, num_stages: int):
+    """Balanced contiguous layer split for pipeline parallelism
+    (DESIGN.md §12): stage s owns layers [lo, hi); earlier stages absorb
+    the remainder so no stage is more than one layer heavier."""
+    assert 1 <= num_stages <= num_layers, (num_stages, num_layers)
+    base, rem = divmod(num_layers, num_stages)
+    bounds, lo = [], 0
+    for s in range(num_stages):
+        hi = lo + base + (1 if s < rem else 0)
+        bounds.append((lo, hi))
+        lo = hi
+    return bounds
+
+
+def slice_stage_params(stack_params: dict, lo: int, hi: int, *, last: bool):
+    """Stage-slice a dense/moe stack's parameters: every stacked per-layer
+    leaf keeps rows [lo, hi); ``final_ln`` ships only with the last stage
+    (it runs after the full depth). ``lax.scan`` over the sliced tree
+    composes bit-identically to one scan over the full stack — the
+    pipeline engine's identity argument (DESIGN.md §12)."""
+    out = {k: jax.tree_util.tree_map(lambda a: a[lo:hi], v)
+           for k, v in stack_params.items() if k != "final_ln"}
+    if last:
+        out["final_ln"] = stack_params["final_ln"]
+    return out
+
+
+def slice_stage_cache(cache: dict, lo: int, hi: int):
+    """Stage-slice a cache pytree: per-layer leaves (leading L axis — k/v
+    slabs or paged pools) keep layers [lo, hi); per-sequence leaves
+    (len/pos/block_table) are shared bookkeeping and pass through whole."""
+    out = dict(cache)
+    for k in ("k", "v", "k_pool", "v_pool"):
+        if k in cache:
+            out[k] = cache[k][lo:hi]
+    return out
+
+
 def _write_kv(cache_k_l, cache_v_l, k, v, lens, mode: str, mask=None):
     """Write new K/V into one layer's cache. Handles ring buffers.
 
@@ -156,8 +194,13 @@ def init_dense_stack(key, cfg: ModelConfig):
 
 def apply_dense_stack(params, x, positions, cfg: ModelConfig, cache, mode: str,
                       window: Optional[int] = None, remat: bool = False,
-                      enc_out=None, chunk_mask=None, chunk_counts=None):
+                      enc_out=None, chunk_mask=None, chunk_counts=None,
+                      final_norm: bool = True):
     """x: (B, S, d). Returns (y, cache, aux_loss).
+
+    ``final_norm=False`` skips the stack's closing norm — a pipeline stage
+    that is not the last one hands its residual stream to the next stage
+    raw (``params`` then need not carry ``final_ln``; DESIGN.md §12).
 
     For encoder-decoder models (whisper): pass ``enc_out`` in train/prefill
     mode; prefill stores the projected cross-K/V into the cache for decode.
@@ -299,7 +342,8 @@ def apply_dense_stack(params, x, positions, cfg: ModelConfig, cache, mode: str,
         S_new = 1 if mode == "decode" else positions.shape[-1]
         cache["len"] = cache["len"] + S_new
         cache["pos"] = cache["pos"] + S_new
-    x = norm(x, params["final_ln"])
+    if final_norm:
+        x = norm(x, params["final_ln"])
     return x, cache, aux
 
 
