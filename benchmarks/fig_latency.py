@@ -1,0 +1,268 @@
+"""Open-loop tail latency: device vs host sampler modes on the
+single-stage engine (DESIGN.md §13).
+
+The paper's headline latency claim — P95 reductions of 20–65% from moving
+sampling off the accelerator — is a statement about *tail* latency under
+*offered* load. A closed-loop harness (submit a batch, wait for it) gates
+arrivals on completions, so it can never observe queueing: the regime
+where tails live. Following DistServe (arXiv:2401.09670), this benchmark
+drives ``Engine`` **open-loop**: requests arrive on a Poisson process at a
+fixed offered rate regardless of engine progress, latency is measured from
+the *intended* arrival instant, and the load axis is swept until the
+system saturates.
+
+Per offered rate and ``sampler_mode`` ∈ {device, host} it reports
+
+* **TTFT**   — first committed token minus arrival (queueing + prefill),
+* **TPOT**   — per-token latency (successive commit gaps),
+* **queue**  — admission wall-clock minus arrival (the pure queueing part),
+
+each as P50 / P95 / P99, plus goodput. Results append a machine-readable
+trajectory point to ``BENCH_latency.json`` so future PRs can diff the
+latency curve, and CI runs the ``--smoke`` configuration
+(``tests/test_latency_bench.py``, the ``latency`` marker).
+
+Caveat mirror of ``fig_pipeline``: on this one-device CPU emulation the
+host pool's workers contend with the forward for the same cores, so
+host-mode wall-clock numbers under-sell a deployment where the pool is
+otherwise-idle host CPU beside an accelerator. The benchmark's value is
+the *methodology* (open-loop arrivals, tail percentiles, both modes on
+identical token streams) and the measured decomposition, not a victory
+claim for either mode on shared cores.
+
+    PYTHONPATH=src python -m benchmarks.fig_latency [--smoke]
+        [--rates 2,6,12] [--requests 48] [--out BENCH_latency.json]
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.config import ModelConfig, SamplingConfig, SHVSConfig
+from repro.engine import Engine, EngineConfig, Request
+
+MAX_NEW = 12
+VOCAB = 8192       # big vocab -> material sampling epilogue (Fig. 1b regime)
+
+_CACHE: dict = {}
+
+
+def _bench_model() -> ModelConfig:
+    return ModelConfig(name="lat-bench", family="dense", num_layers=2,
+                       d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                       vocab_size=VOCAB)
+
+
+def _params(cfg: ModelConfig):
+    if "params" not in _CACHE:
+        from repro.models.model import Model
+        _CACHE["params"] = Model(cfg).init(jax.random.PRNGKey(0))
+    return _CACHE["params"]
+
+
+def _requests(cfg: ModelConfig, n: int, max_new: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return [Request(
+        request_id=i,
+        prompt=rng.integers(1, cfg.vocab_size,
+                            int(rng.integers(4, 16))).tolist(),
+        max_new_tokens=max_new,
+        sampling=SamplingConfig(temperature=0.9, top_k=40, top_p=0.95,
+                                repetition_penalty=1.1))
+        for i in range(n)]
+
+
+def poisson_arrivals(n: int, rate: float, seed: int = 0) -> np.ndarray:
+    """Cumulative arrival offsets (s) of a Poisson process at ``rate``
+    requests/s — the same draw for every mode, so the offered trace is
+    identical across the comparison."""
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate, size=n))
+
+
+def open_loop(eng, reqs, arrivals: np.ndarray) -> float:
+    """Drive the engine open-loop: submit each request when its arrival
+    instant passes — never gated on engine progress — and step whenever
+    there is work. Returns the wall-clock makespan (s)."""
+    t0 = time.perf_counter()
+    idx, n = 0, len(reqs)
+    while idx < n or eng.scheduler.has_work or eng.in_flight:
+        now = time.perf_counter() - t0
+        while idx < n and arrivals[idx] <= now:
+            # latency is measured from the INTENDED arrival: submission
+            # granularity (one engine step) counts as queueing, as it
+            # would in a real frontend
+            reqs[idx].arrival_time = t0 + float(arrivals[idx])
+            eng.submit([reqs[idx]])
+            idx += 1
+        if eng.scheduler.has_work or eng.in_flight:
+            eng.step()
+        elif idx < n:
+            time.sleep(min(1e-3, max(
+                0.0, float(arrivals[idx]) - (time.perf_counter() - t0))))
+    eng.flush()
+    return time.perf_counter() - t0
+
+
+def _pcts(xs, scale: float = 1e3) -> dict:
+    if not xs:
+        return {"p50": 0.0, "p95": 0.0, "p99": 0.0}
+    return {p: float(np.percentile(xs, q) * scale)
+            for p, q in (("p50", 50), ("p95", 95), ("p99", 99))}
+
+
+def _engine(mode: str, samplers: int = 2) -> Engine:
+    """One engine per sampler mode, shared across the load sweep so every
+    rate point runs with warm programs (jit caches are per-instance)."""
+    key = ("eng", mode, samplers)
+    if key in _CACHE:
+        return _CACHE[key]
+    cfg = _bench_model()
+    eng = Engine(cfg, _params(cfg), EngineConfig(
+        max_batch=8, max_seq_len=64, algorithm="reference",
+        shvs=SHVSConfig(hot_size=min(1024, VOCAB // 4)),
+        k_cap=min(256, VOCAB), prompt_bucket=16, overlap=True,
+        sampler_mode=mode, samplers=samplers))
+    # warm every program the open loop can hit — decode (+ the pool's
+    # shard step) and one prefill per admission group size P (prompts all
+    # bucket to Sp=16) — so TTFT measures serving, not tracing
+    for P in range(1, eng.ecfg.max_batch + 1):
+        warm = _requests(cfg, P, 3 if P == eng.ecfg.max_batch else 1,
+                         seed=90 + P)
+        for w in warm:
+            w.request_id += 10_000 + 100 * P
+        eng.submit(warm)
+        eng.run(max_steps=200)
+    eng.scheduler.finished.clear()
+    eng.stats_log.clear()
+    _CACHE[key] = eng
+    return eng
+
+
+def close_engines() -> None:
+    """Shut down the cached engines' sampler pools (host-mode threads)."""
+    for key in [k for k in _CACHE if isinstance(k, tuple) and
+                k and k[0] == "eng"]:
+        _CACHE.pop(key).close()
+
+
+def measure(mode: str, rate: float, n_requests: int, max_new: int = MAX_NEW,
+            samplers: int = 2, seed: int = 0) -> dict:
+    """One open-loop run at ``rate`` req/s with ``sampler_mode=mode``;
+    returns the percentile row (times in ms)."""
+    cfg = _bench_model()
+    eng = _engine(mode, samplers)
+    reqs = _requests(cfg, n_requests, max_new, seed=seed)
+    arrivals = poisson_arrivals(n_requests, rate, seed=seed)
+    makespan = open_loop(eng, reqs, arrivals)
+    eng.scheduler.finished.clear()
+    eng.stats_log.clear()
+    assert all(r.done for r in reqs), "open-loop run left requests open"
+
+    ttft, tpot, queue = [], [], []
+    for r in reqs:
+        if r.first_token_time is not None:
+            ttft.append(r.first_token_time - r.arrival_time)
+        if r.admit_time is not None:
+            queue.append(max(0.0, r.admit_time - r.arrival_time))
+        if len(r.token_times) > 1:
+            tpot.extend(np.diff(r.token_times))
+    toks = sum(len(r.output) for r in reqs)
+    return {
+        "mode": mode, "rate_rps": rate, "n_requests": n_requests,
+        "tokens": toks, "makespan_s": float(makespan),
+        "throughput_tps": float(toks / makespan) if makespan else 0.0,
+        "ttft_ms": _pcts(ttft), "tpot_ms": _pcts(tpot),
+        "queue_ms": _pcts(queue),
+        # committed streams ride along (stripped from the JSON point) so
+        # the sweep can assert host ≡ device bit-identity on the very runs
+        # it measured — uniforms are keyed on (request, position), so the
+        # streams are invariant to arrival timing by construction
+        "streams": {r.request_id: list(r.output) for r in reqs},
+    }
+
+
+def sweep(rates, n_requests: int, max_new: int = MAX_NEW,
+          emit_fn=emit) -> list:
+    rows = []
+    for rate in rates:
+        per_mode = {}
+        for mode in ("device", "host"):
+            row = measure(mode, rate, n_requests, max_new=max_new)
+            per_mode[mode] = row["streams"]
+            rows.append(row)
+            emit_fn(
+                f"fig_latency.{mode}.rate{rate:g}",
+                row["tpot_ms"]["p95"] * 1e3,
+                f"ttft p50={row['ttft_ms']['p50']:.1f} "
+                f"p95={row['ttft_ms']['p95']:.1f} "
+                f"p99={row['ttft_ms']['p99']:.1f}ms | "
+                f"tpot p50={row['tpot_ms']['p50']:.1f} "
+                f"p95={row['tpot_ms']['p95']:.1f} "
+                f"p99={row['tpot_ms']['p99']:.1f}ms | "
+                f"queue p95={row['queue_ms']['p95']:.1f}ms | "
+                f"{row['throughput_tps']:.1f} tok/s (paper: P95 -20-65%)")
+        assert per_mode["host"] == per_mode["device"], (
+            "host-mode committed streams diverged from device mode — the "
+            "latency comparison is only meaningful over identical tokens")
+    return rows
+
+
+def write_trajectory(rows: list, out: str = "BENCH_latency.json") -> dict:
+    """Append one trajectory point (config + all sweep rows) to ``out`` —
+    the bench history future PRs diff against."""
+    point = {
+        "bench": "fig_latency", "schema": 1,
+        "completed_unix": int(time.time()),
+        "model": {"vocab_size": VOCAB, "layers": 2, "d_model": 64},
+        "results": [{k: v for k, v in r.items() if k != "streams"}
+                    for r in rows],
+    }
+    try:
+        with open(out) as f:
+            doc = json.load(f)
+        assert isinstance(doc.get("trajectory"), list)
+    except (OSError, ValueError, AssertionError):
+        doc = {"bench": "fig_latency", "trajectory": []}
+    doc["trajectory"].append(point)
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    return point
+
+
+def run(emit_fn=emit, smoke: bool = False, out: str = "BENCH_latency.json",
+        rates=None, n_requests: int = None) -> list:
+    if rates is None:
+        rates = (4.0, 12.0) if smoke else (2.0, 6.0, 12.0, 24.0)
+    if n_requests is None:
+        n_requests = 10 if smoke else 48
+    try:
+        rows = sweep(rates, n_requests, max_new=6 if smoke else MAX_NEW,
+                     emit_fn=emit_fn)
+    finally:
+        close_engines()
+    if out:
+        write_trajectory(rows, out)
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized sweep (2 rates, 10 requests)")
+    ap.add_argument("--rates", default=None,
+                    help="comma-separated offered loads (req/s)")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_latency.json",
+                    help="trajectory file ('' disables writing)")
+    args = ap.parse_args()
+    rates = tuple(float(r) for r in args.rates.split(",")) \
+        if args.rates else None
+    run(emit, smoke=args.smoke, out=args.out, rates=rates,
+        n_requests=args.requests)

@@ -106,10 +106,14 @@ def validate(stages: int, microbatches: int, emit_fn) -> None:
     # measured components (s): forward = mean stage busy NET of sampling
     t_stage = (np.mean(base["stage_util"]) * base["mean_cycle_ms"]
                - base["sample_ms_mean"] / stages) * 1e-3
+    # the pool's per-row cost is fetch + CPU sampling: pipeline_report
+    # splits them (transfer_ms_mean vs sampler_ms_mean, DESIGN.md §13) but
+    # the simulator's t_sampler_row models the whole host-side path
     scfg = SimConfig(num_stages=stages, num_microbatches=microbatches,
                      t_stage=t_stage,
                      t_sampling_gpu=base["sample_ms_mean"] * 1e-3,
-                     t_sampler_row=(simple["sampler_ms_mean"] * 1e-3
+                     t_sampler_row=((simple["sampler_ms_mean"]
+                                     + simple["transfer_ms_mean"]) * 1e-3
                                     / max(ROWS, 1)),
                      num_samplers=1, batch_slots=ROWS * microbatches,
                      jitter=0.0)
@@ -139,6 +143,8 @@ def run(emit_fn=emit) -> None:
                 f"bubble={simple['bubble_frac']:.1%} "
                 f"cycle={simple['mean_cycle_ms']:.2f}ms "
                 f"stall={simple['stall_ms_mean']:.2f}ms "
+                f"sampler={simple['sampler_ms_mean']:.2f}ms "
+                f"xfer={simple['transfer_ms_mean']:.2f}ms "
                 f"tpot_p50={simple['tpot_p50_ms']:.1f}ms")
         # headline: pipeline-cycle gain (Eq. 4's C — in a real PP
         # deployment tokens/s scales with 1/C). Wall-clock TPOT is also

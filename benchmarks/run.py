@@ -20,6 +20,8 @@ MODULES = [
     ("fig_pipeline", "benchmarks.fig_pipeline",
      "Executable pipeline engine: measured baseline-vs-SIMPLE bubbles"),
     ("fig3", "benchmarks.fig3_throughput", "Fig 3: end-to-end throughput"),
+    ("latency", "benchmarks.fig_latency",
+     "Open-loop P95 latency: device vs host sampler modes"),
     ("fig5", "benchmarks.fig_latency_ecdf", "Fig 4/5/7: TPOT P95"),
     ("fig6", "benchmarks.fig6_load_latency", "Fig 6: load-latency"),
     ("overlap", "benchmarks.fig_overlap",

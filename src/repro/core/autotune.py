@@ -94,5 +94,12 @@ class HotSizeController:
                              "h_current": self.h_current})
         if abs(np.log2(max(h_star, 1) / max(self.h_current, 1))) > self.hysteresis:
             self.h_current = int(h_star)
+            # ᾱ was measured at the OLD H — fitting the Zipf tail against
+            # those observations after the move would chase a stale curve
+            # and can thrash across the hysteresis band. Restart the
+            # observation window: the EWMA refills with new-H measurements
+            # and the next adjustment happens a full ``adjust_every`` later.
+            self._alpha_ewma = None
+            self._step = 0
             return self.h_current
         return None

@@ -1,5 +1,5 @@
-"""Host-side sampler worker pool — the disaggregated decision plane for the
-pipeline-parallel engine (DESIGN.md §12).
+"""Host-side sampler worker pool — the disaggregated decision plane behind
+``DecisionPlaneClient`` for BOTH serving engines (DESIGN.md §12/§13).
 
 The paper's structural claim (§1, Eq. 4) is that sampling neither expands
 with TP nor balances across PP stages: executed on the last stage's
@@ -22,8 +22,11 @@ single-stage engine's fused on-device decision (pinned by
 The pool is deliberately synchronous-free on the submit path: ``submit``
 returns a :class:`SampleTicket` immediately and the caller blocks only in
 :meth:`SampleTicket.result` — which the pipeline engine calls when the
-microbatch re-enters stage 1, ``(M − p)`` cycles later. The measured block
-time is exactly the paper's "sampler pool too slow for the slack" stall.
+microbatch re-enters stage 1, ``(M − p)`` cycles later, and the
+single-stage engine calls one overlapped step later (§13). The measured
+block time is exactly the paper's "sampler pool too slow for the slack"
+stall; the worker-side ``device_get`` wait and the CPU sampling itself are
+accounted separately (``transfer_time`` vs ``sampler_time``).
 """
 from __future__ import annotations
 
@@ -40,15 +43,26 @@ from repro.core.decision_plane import DecisionPlane
 
 
 class PoolResult(NamedTuple):
-    """One microbatch's assembled sampling outcome."""
+    """One microbatch's assembled sampling outcome.
+
+    ``sampler_time`` and ``transfer_time`` are accounted separately: a
+    worker's clock on the *sampling* critical path starts only after its
+    ``device_get`` returns, so blocking on an in-flight forward (device
+    compute + D2H transfer) can never masquerade as CPU sampling cost —
+    conflating the two would poison the bubble accounting that decides
+    whether the pool makes the pipeline's ``(M − p)``-cycle slack.
+    """
 
     tokens: np.ndarray           # (R,) int32; inactive rows are 0
     state: pen.PenaltyState      # updated (R, V) histogram rows
     accept_rate: float
     alpha_mean: float
     fallback_rate: float
-    sampler_time: float          # max worker wall time (s) — the pool's
-    #                              critical path for this microbatch
+    sampler_time: float          # max worker CPU-sampling wall time (s) —
+    #                              the pool's critical path, fetch excluded
+    transfer_time: float         # max worker device_get wall time (s):
+    #                              blocking on in-flight compute + D2H copy
+    active_rows: int             # rows that actually sampled this call
 
 
 def _shard_bounds(rows: int, workers: int) -> List[tuple]:
@@ -58,6 +72,17 @@ def _shard_bounds(rows: int, workers: int) -> List[tuple]:
     return stage_bounds(rows, max(1, min(workers, rows)))
 
 
+class _ShardResult(NamedTuple):
+    """One worker's slice of a microbatch."""
+
+    tokens: np.ndarray
+    state: pen.PenaltyState
+    stats: tuple                 # (accept_rate, alpha_mean, fallback_rate)
+    active_rows: int
+    transfer_time: float
+    sampler_time: float
+
+
 class SampleTicket:
     """Pending sampled tokens for one microbatch (one future per shard).
 
@@ -65,29 +90,47 @@ class SampleTicket:
     full-microbatch :class:`PoolResult`; ``done`` is a non-blocking probe.
     """
 
-    def __init__(self, futures: List[Future], widths: List[int]):
+    def __init__(self, futures: List[Future]):
         self._futures = futures
-        self._widths = widths
 
     @property
     def done(self) -> bool:
         return all(f.done() for f in self._futures)
 
     def result(self) -> PoolResult:
-        parts = [f.result() for f in self._futures]
-        tokens = np.concatenate([p[0] for p in parts])
+        parts: List[_ShardResult] = [f.result() for f in self._futures]
+        tokens = np.concatenate([p.tokens for p in parts])
         state = pen.PenaltyState(
             prompt_counts=jnp.concatenate(
-                [p[1].prompt_counts for p in parts]),
+                [p.state.prompt_counts for p in parts]),
             output_counts=jnp.concatenate(
-                [p[1].output_counts for p in parts]))
-        total = float(sum(self._widths))
-        wmean = lambda idx: float(sum(
-            w * float(p[2][idx]) for w, p in zip(self._widths, parts)) / total)
+                [p.state.output_counts for p in parts]))
         return PoolResult(tokens=tokens, state=state,
-                          accept_rate=wmean(0), alpha_mean=wmean(1),
-                          fallback_rate=wmean(2),
-                          sampler_time=max(p[3] for p in parts))
+                          **_pool_stats(parts),
+                          sampler_time=max(p.sampler_time for p in parts),
+                          transfer_time=max(p.transfer_time for p in parts),
+                          active_rows=sum(p.active_rows for p in parts))
+
+
+def _pool_stats(parts: List["_ShardResult"]) -> dict:
+    """Pool shard stats weighted by ACTIVE rows, not shard width.
+
+    A mostly-drained microbatch has shards whose rows are nearly all
+    inactive; width-weighting those shards' means skews the pooled
+    ``alpha_mean`` that feeds the SHVS autotuner. Shards with zero active
+    rows carry zero weight (their backend means are meaningless — possibly
+    NaN — and must not propagate); with no active rows anywhere the stats
+    are NaN, which :class:`repro.core.autotune.HotSizeController` ignores.
+    """
+    total = float(sum(p.active_rows for p in parts))
+    if total == 0.0:
+        return {"accept_rate": float("nan"), "alpha_mean": float("nan"),
+                "fallback_rate": float("nan")}
+    wmean = lambda idx: float(sum(
+        p.active_rows * float(p.stats[idx])
+        for p in parts if p.active_rows) / total)
+    return {"accept_rate": wmean(0), "alpha_mean": wmean(1),
+            "fallback_rate": wmean(2)}
 
 
 class HostSamplerPool:
@@ -104,6 +147,14 @@ class HostSamplerPool:
         self.plane = plane
         self.num_workers = max(1, num_workers)
         self._ex: Optional[ThreadPoolExecutor] = None
+        self.refresh()
+
+    def refresh(self) -> None:
+        """(Re-)jit the worker-side decision program. Call after the
+        plane's configuration changed under the pool — e.g. the SHVS
+        autotuner swapping ``hot_set`` — since the traced program captured
+        the backend as of trace time."""
+        plane = self.plane
 
         def _step(logits, state, params, bias, nonces, pos, step, active):
             tokens, state, stats = plane.step(
@@ -115,11 +166,18 @@ class HostSamplerPool:
         self._step_jit = jax.jit(_step)
 
     # -- worker body ---------------------------------------------------------
+    def _fetch(self, logits, lo: int, hi: int):
+        """The disaggregation boundary: the shard's logits cross to the
+        host explicitly. Blocks on any in-flight device compute producing
+        them — a separate seam so that wait is timed (and testable) apart
+        from the CPU sampling that follows."""
+        return jnp.asarray(jax.device_get(logits[lo:hi]))
+
     def _run_shard(self, lo: int, hi: int, logits, state, params, bias,
-                   nonces, pos, step, active):
+                   nonces, pos, step, active) -> _ShardResult:
         t0 = time.perf_counter()
-        # the disaggregation boundary: logits cross to the host explicitly
-        shard = jnp.asarray(jax.device_get(logits[lo:hi]))
+        shard = self._fetch(logits, lo, hi)
+        t1 = time.perf_counter()     # sampling clock starts AFTER the fetch
         sl = lambda a: None if a is None else a[lo:hi]
         tokens, new_state, stats = self._step_jit(
             shard,
@@ -131,7 +189,10 @@ class HostSamplerPool:
         toks = np.asarray(tokens)        # worker-side host sync
         stats_host = (float(stats.accept_rate), float(stats.alpha_mean),
                       float(stats.fallback_rate))
-        return toks, new_state, stats_host, time.perf_counter() - t0
+        return _ShardResult(tokens=toks, state=new_state, stats=stats_host,
+                            active_rows=int(np.count_nonzero(active[lo:hi])),
+                            transfer_time=t1 - t0,
+                            sampler_time=time.perf_counter() - t1)
 
     # -- client surface ------------------------------------------------------
     def submit(self, logits, state: pen.PenaltyState, params, bias,
@@ -151,18 +212,21 @@ class HostSamplerPool:
         futures = [self._ex.submit(self._run_shard, lo, hi, logits, state,
                                    params, bias, nonces, pos, step, active)
                    for lo, hi in bounds]
-        return SampleTicket(futures, [hi - lo for lo, hi in bounds])
+        return SampleTicket(futures)
 
     def sample_sync(self, logits, state, params, bias, nonces, pos, step,
                     active) -> PoolResult:
-        """Full-width draw on the calling thread (baseline mode): the same
-        decision program, blocking the last stage's cycle on the result."""
+        """Full-width draw on the calling thread (device/baseline mode):
+        the same decision program, blocking the caller's cycle on the
+        result."""
         R = logits.shape[0]
         part = self._run_shard(0, R, logits, state, params, bias, nonces,
                                pos, step, active)
-        return PoolResult(tokens=part[0], state=part[1],
-                          accept_rate=part[2][0], alpha_mean=part[2][1],
-                          fallback_rate=part[2][2], sampler_time=part[3])
+        return PoolResult(tokens=part.tokens, state=part.state,
+                          **_pool_stats([part]),
+                          sampler_time=part.sampler_time,
+                          transfer_time=part.transfer_time,
+                          active_rows=part.active_rows)
 
     def close(self) -> None:
         if self._ex is not None:

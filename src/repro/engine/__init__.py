@@ -1,5 +1,8 @@
 """Serving substrate: requests, continuous-batching scheduler, engine."""
 from repro.engine.request import Request, RequestState  # noqa: F401
+from repro.engine.decision_client import (DecisionPlaneClient,  # noqa: F401
+                                          SAMPLER_MODES,
+                                          canonical_sampler_mode)
 from repro.engine.engine import (Engine, EngineConfig,  # noqa: F401
                                  GenerationEvent, SlotParams,
                                  generate_stream)

@@ -1,0 +1,110 @@
+"""Unified decision-plane client — ONE sampling seam for every engine
+(DESIGN.md §13).
+
+Both serving engines speak to the decision plane through this client, in
+one of two modes:
+
+* ``device`` — the decision executes on the accelerator, synchronous with
+  the engine's own program chain. The single-stage :class:`Engine` fuses
+  ``DecisionPlane.step`` into its jitted decode program (the §2 overlapped
+  loop); the :class:`PipelineEngine` runs it full-width on the calling
+  thread right after the last stage's forward (the paper's Eq. 4 baseline,
+  historically ``sampler_mode="baseline"``).
+* ``host`` — the paper's disaggregation: logits are ``device_get``'d and a
+  :class:`~repro.core.host_sampler.HostSamplerPool` of CPU workers runs
+  sequence-parallel row shards through the identical
+  :class:`~repro.core.decision_plane.DecisionPlane`. ``submit`` never
+  blocks; the engine collects the :class:`SampleTicket` one step (or one
+  pipeline re-entry) later, so CPU sampling for step *t* overlaps the
+  host-side work — and any still-in-flight device compute — of step *t+1*
+  (historically ``sampler_mode="disaggregated"``).
+
+The two modes are bit-identical by construction: every per-row decision
+computation (penalties, filters, the backend draw, the Eq. 5 histogram
+update) is row-local and uniforms are keyed on (request, position), so
+neither the worker sharding nor the commit timing can move any request's
+stream (``tests/test_decision_client.py``, ``tests/test_pipeline_engine.py``).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.core.decision_plane import DecisionPlane
+from repro.core.host_sampler import HostSamplerPool, PoolResult, SampleTicket
+
+#: accepted ``sampler_mode`` spellings -> canonical client mode. The
+#: pipeline's original names stay valid so existing configs don't break.
+SAMPLER_MODES = {
+    "device": "device",
+    "host": "host",
+    "baseline": "device",
+    "disaggregated": "host",
+}
+
+
+def canonical_sampler_mode(mode: str) -> str:
+    """Map a ``sampler_mode`` spelling to ``device`` | ``host``; unknown
+    names raise a ``ValueError`` listing the accepted spellings."""
+    try:
+        return SAMPLER_MODES[mode]
+    except KeyError:
+        raise ValueError(
+            f"unknown sampler_mode {mode!r}; expected one of "
+            f"{sorted(SAMPLER_MODES)}") from None
+
+
+class DecisionPlaneClient:
+    """The engines' handle on the (possibly remote) decision plane.
+
+    Thin by design: the sharding, RNG, and assembly live in
+    :class:`HostSamplerPool`; the client owns mode selection, the worker
+    pool's lifecycle, and the re-jit hook the autotuner needs. The pool's
+    executor threads are started lazily on the first host-mode ``submit``,
+    so a device-mode client costs nothing.
+    """
+
+    def __init__(self, plane: DecisionPlane, mode: str = "device",
+                 workers: int = 2):
+        self.mode = canonical_sampler_mode(mode)
+        self.plane = plane
+        self.pool = HostSamplerPool(plane, workers)
+
+    @property
+    def is_host(self) -> bool:
+        return self.mode == "host"
+
+    # -- the async surface ---------------------------------------------------
+    def submit(self, logits, state, params, bias, nonces: np.ndarray,
+               pos: np.ndarray, step: int,
+               active: np.ndarray) -> SampleTicket:
+        """Dispatch one batch's sampling to the host pool (host mode).
+        Never blocks: ``logits`` may still be an in-flight device future —
+        the pool's workers block on it, not the caller."""
+        assert self.is_host, "submit() is the host-mode path"
+        return self.pool.submit(logits, state, params, bias, nonces, pos,
+                                step, active)
+
+    def sample_sync(self, logits, state, params, bias, nonces, pos, step,
+                    active) -> PoolResult:
+        """Full-width draw on the calling thread — the device-mode path for
+        an engine that does not fuse the decision into its forward program
+        (the pipeline's last-stage Eq. 4 baseline)."""
+        return self.pool.sample_sync(logits, state, params, bias, nonces,
+                                     pos, step, active)
+
+    # -- lifecycle -----------------------------------------------------------
+    def refresh(self) -> None:
+        """Re-jit the pool's decision program after the plane's
+        configuration changed under it (the SHVS autotuner swapping
+        ``hot_set`` re-shapes the backend's operands)."""
+        self.pool.refresh()
+
+    def close(self) -> None:
+        """Shut down the worker pool; blocks until in-flight shards land."""
+        self.pool.close()
+
+
+__all__ = ["DecisionPlaneClient", "SAMPLER_MODES", "canonical_sampler_mode",
+           "PoolResult", "SampleTicket"]

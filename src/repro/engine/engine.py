@@ -47,6 +47,19 @@ per-slot :class:`SlotParams` rows threaded into every jitted program, and
 clients stream results through :meth:`Engine.generate`, which yields
 ``(request_id, token, finish_reason)`` events at **commit** time.
 
+**Host sampler mode** (``sampler_mode="host"``, DESIGN.md §13). The engine
+reaches the decision plane through a unified
+:class:`~repro.engine.decision_client.DecisionPlaneClient`: device mode
+keeps the decision fused into the decode program (everything above); host
+mode dispatches a forward-only program and hands the logits *future* to
+the client's CPU sampler pool — the workers block on the in-flight device
+compute, sample sequence-parallel shards through the identical
+``DecisionPlane.step``, and the engine resolves the ticket at the top of
+the next step (before admissions overwrite any slot's rows), committing
+one step behind exactly like the overlapped device loop. Streams are
+bit-identical to device mode in every engine mode
+(``tests/test_decision_client.py``).
+
 The engine is deliberately token-only (dense/moe/ssm/hybrid archs); the
 multimodal frontends are exercised by the dry-run and smoke tests.
 """
@@ -62,8 +75,10 @@ import numpy as np
 
 from repro.config import ModelConfig, SamplingConfig, SHVSConfig
 from repro.core.decision_plane import DecisionPlane
+from repro.core.host_sampler import PoolResult, SampleTicket
 from repro.core.sampling import SamplingParams
 from repro.core import penalties as pen
+from repro.engine.decision_client import DecisionPlaneClient
 from repro.engine.paged_cache import (BlockAllocator, PagedCacheConfig,
                                       init_paged_cache)
 from repro.engine.request import Request, RequestState
@@ -90,6 +105,11 @@ class EngineConfig:
     block_size: int = 16             # paged: tokens per KV block
     num_blocks: int = 0              # paged pool size; 0 = memory-equal to
     #                                  the contiguous cache (B * S / bs)
+    sampler_mode: str = "device"     # decision plane placement (§13):
+    #                                  "device" (fused into the decode
+    #                                  program) | "host" (CPU sampler pool,
+    #                                  committed one step behind)
+    samplers: int = 2                # host-mode sampler pool workers
 
 
 def _bucket(n: int, mult: int) -> int:
@@ -146,11 +166,19 @@ def generate_stream(eng, requests: List[Request], max_steps: int = 10_000):
                 yield GenerationEvent(r.request_id, None, r.finish_reason)
 
     steps = 0
-    while not all(closed) and steps < max_steps and \
-            (eng.scheduler.has_work or eng.in_flight):
-        eng.step()
-        steps += 1
-        yield from drain()
+    try:
+        while not all(closed) and steps < max_steps and \
+                (eng.scheduler.has_work or eng.in_flight):
+            eng.step()
+            steps += 1
+            yield from drain()
+    except GeneratorExit:
+        # the caller abandoned the iterator mid-stream: commit everything
+        # in flight so no sampler-pool ticket (host mode) or device future
+        # is left dangling — pool threads go idle and a later
+        # ``eng.close()`` cannot block on abandoned work (DESIGN.md §13)
+        eng.flush()
+        raise
     eng.flush()
     yield from drain()
     if not all(closed):
@@ -223,15 +251,26 @@ def prefill_new_rows(eng, new_requests: List[Request], step_idx: int):
 
 @dataclass
 class _Pending:
-    """One dispatched-but-uncommitted device result (DESIGN.md §2)."""
+    """One dispatched-but-uncommitted iteration result (DESIGN.md §2/§13).
 
-    kind: str                                   # "decode" | "first"
-    tokens: jnp.ndarray                         # (B,) device future
+    ``kind="decode"`` carries device futures (tokens + stats) from the
+    fused decode program; ``kind="host"`` carries a sampler-pool
+    :class:`SampleTicket` instead — resolved (tokens/penalty state
+    installed into engine state) before the next dispatch needs them,
+    committed to request state at the drain point one step behind;
+    ``kind="first"`` carries chunk finishers' first tokens.
+    """
+
+    kind: str                                   # "decode" | "host" | "first"
+    tokens: Optional[jnp.ndarray] = None        # (B,) device future
     step: int = -1
     stats: Optional[object] = None              # DecisionStats (decode only)
     active: Optional[np.ndarray] = None         # (B,) bool snapshot
     slot_request: Optional[List[Optional[Request]]] = None
     finishers: List[Tuple[int, Request]] = field(default_factory=list)
+    ticket: Optional[SampleTicket] = None       # host mode: pending shards
+    res: Optional[PoolResult] = None            # host mode: resolved result
+    stall: float = 0.0                          # host mode: block on ticket
 
 
 class Engine:
@@ -298,6 +337,13 @@ class Engine:
             sampling_parallelism=engine_cfg.sampling_parallelism,
             k_cap=min(engine_cfg.k_cap, model_cfg.vocab_size),
             seed=engine_cfg.seed)
+        # the decision-plane client (§13): device mode keeps the decision
+        # fused into the decode program (§2); host mode splits the forward
+        # off and ships logits to the client's CPU sampler pool, committing
+        # one step behind exactly like the overlapped device loop
+        self.client = DecisionPlaneClient(
+            self.decision, engine_cfg.sampler_mode, engine_cfg.samplers)
+        self._host = self.client.is_host
         self.cache = (init_paged_cache(model_cfg, B, self.pcfg)
                       if self._paged else self.model.init_cache(B, S))
         self.pstate = self.decision.init_state(B)
@@ -329,6 +375,11 @@ class Engine:
         donate = () if jax.default_backend() == "cpu" else (1, 2)
         self._decode_jit = jax.jit(self._decode_impl, donate_argnums=donate)
         self._chunk_jit = jax.jit(self._chunk_impl, donate_argnums=donate)
+        # host sampler mode (§13): forward-only program — the decision
+        # plane runs in the client's CPU pool on the fetched logits
+        fwd_donate = () if jax.default_backend() == "cpu" else (1,)
+        self._forward_jit = jax.jit(self._forward_impl,
+                                    donate_argnums=fwd_donate)
 
     # -- jitted bodies ---------------------------------------------------------
     def _decode_impl(self, params, cache, pstate, last_tokens, sparams, bias,
@@ -344,6 +395,16 @@ class Engine:
             rng_tags=(nonces, pos), logit_bias=bias)
         tokens = jnp.where(active, tokens, 0)
         return tokens, cache, pstate, stats
+
+    def _forward_impl(self, params, cache, last_tokens, active):
+        """Decode forward WITHOUT the decision epilogue (host sampler
+        mode, §13): returns the step's logits; the client's pool fetches
+        them and runs the identical ``DecisionPlane.step`` off-device."""
+        lens0 = cache["len"]
+        logits, cache = self.model.decode_step(params, last_tokens, cache)
+        cache = dict(cache)
+        cache["len"] = jnp.where(active, lens0 + 1, lens0)
+        return logits, cache
 
     def _prefill_impl(self, params, tokens, true_lens):
         """Prefill a fresh batch (P rows); returns (first tokens' logits
@@ -522,6 +583,15 @@ class Engine:
         # (different (P, Sp) prefill programs → bitwise logit drift) and
         # breaks run-to-run determinism. The drain point is fixed instead.
         plan = self.scheduler.schedule()
+        if self._host:
+            # install the in-flight ticket's tokens + penalty state BEFORE
+            # admission/chunks overwrite their slots' rows: the CPU workers
+            # sampled step t while the host side ran ahead; step t+1's
+            # forward consumes their tokens. (The request-state commit
+            # still lands at the drain point, one step behind — the plan
+            # above was computed without step t's tokens, exactly like the
+            # device-mode overlap loop.)
+            self._resolve_host_pending()
         if plan.new_requests:
             self._admit(plan.new_requests)
         if plan.new_chunked:
@@ -542,23 +612,39 @@ class Engine:
         if dispatched:
             active = jnp.asarray(plan.active_slots)
             sparams = self._sp.as_params()
-            # .copy(): jnp.asarray can alias host numpy buffers zero-copy on
-            # CPU, and the async in-flight program must not observe the
-            # engine mutating _nonce/_pos after dispatch
-            tokens, self.cache, self.pstate, stats = self._decode_jit(
-                self.params, self.cache, self.pstate, self.last_tokens,
-                sparams, self._sp.bias_array(),
-                jnp.asarray(self._nonce.copy()),
-                jnp.asarray(self._pos.copy()),
-                jnp.asarray(plan.step, jnp.int32), active)
-            self.last_tokens = tokens
+            if self._host:
+                # §13: dispatch the forward-only program (async) and hand
+                # the logits FUTURE to the sampler pool — the workers, not
+                # this thread, block on the in-flight device compute; the
+                # engine keeps running the next step's host-side work
+                logits, self.cache = self._forward_jit(
+                    self.params, self.cache, self.last_tokens, active)
+                ticket = self.client.submit(
+                    logits, self.pstate, sparams, self._sp.bias_array(),
+                    self._nonce.copy(), self._pos.copy(), plan.step,
+                    plan.active_slots.copy())
+                self._pending.append(_Pending(
+                    kind="host", ticket=ticket, step=plan.step,
+                    active=plan.active_slots.copy(),
+                    slot_request=list(plan.slot_request)))
+            else:
+                # .copy(): jnp.asarray can alias host numpy buffers
+                # zero-copy on CPU, and the async in-flight program must
+                # not observe the engine mutating _nonce/_pos after dispatch
+                tokens, self.cache, self.pstate, stats = self._decode_jit(
+                    self.params, self.cache, self.pstate, self.last_tokens,
+                    sparams, self._sp.bias_array(),
+                    jnp.asarray(self._nonce.copy()),
+                    jnp.asarray(self._pos.copy()),
+                    jnp.asarray(plan.step, jnp.int32), active)
+                self.last_tokens = tokens
+                self._pending.append(_Pending(
+                    kind="decode", tokens=tokens, step=plan.step, stats=stats,
+                    active=plan.active_slots.copy(),
+                    slot_request=list(plan.slot_request)))
             self._pos += plan.active_slots
             if self._paged:
                 self._slot_len += plan.active_slots
-            self._pending.append(_Pending(
-                kind="decode", tokens=tokens, step=plan.step, stats=stats,
-                active=plan.active_slots.copy(),
-                slot_request=list(plan.slot_request)))
         # drain: sequential mode syncs everything now; overlapped mode keeps
         # exactly one decode in flight so the device never waits on the host
         keep = 1 if (self.ecfg.overlap and dispatched) else 0
@@ -600,30 +686,77 @@ class Engine:
         """
         yield from generate_stream(self, requests, max_steps)
 
+    def close(self) -> None:
+        """Shut down the decision-plane client's sampler pool (host-mode
+        worker threads), mirroring :meth:`PipelineEngine.close`. In-flight
+        iterations are committed first so no ticket is stranded."""
+        self.flush()
+        self.client.close()
+
     # -- commit ----------------------------------------------------------------
+    def _resolve_host_pending(self) -> None:
+        """Host mode (§13): collect the in-flight ticket's sampled tokens
+        and updated penalty rows into engine state so the next dispatch can
+        consume them. Idempotent; the blocking time is the measured
+        sampler-pool stall (zero when the workers beat the host's slack).
+        The scheduler-side commit still happens at the drain point."""
+        for ent in self._pending:
+            if ent.kind == "host" and ent.res is None:
+                t0 = time.perf_counter()
+                ent.res = ent.ticket.result()
+                ent.stall = time.perf_counter() - t0
+                self.last_tokens = jnp.asarray(ent.res.tokens)
+                self.pstate = ent.res.state
+
     def _drain_one(self) -> Optional[dict]:
-        """Fetch the oldest pending device result to the host and commit it.
-        This is the only place engine iterations block on the device."""
+        """Fetch the oldest pending result to the host and commit it. This
+        is the only place engine iterations block on the device (device
+        mode) or the sampler pool (host mode, if not already resolved)."""
         ent = self._pending.pop(0)
-        toks_np = np.asarray(ent.tokens)          # host sync point
+        if ent.kind == "host":
+            if ent.res is None:       # sequential mode drains immediately
+                t0 = time.perf_counter()
+                ent.res = ent.ticket.result()
+                ent.stall = time.perf_counter() - t0
+                self.last_tokens = jnp.asarray(ent.res.tokens)
+                self.pstate = ent.res.state
+            toks_np = ent.res.tokens
+        else:
+            toks_np = np.asarray(ent.tokens)      # host sync point
         now = time.perf_counter()
         if ent.kind == "first":
             for slot, req in ent.finishers:
                 req.record_token(int(toks_np[slot]), now)
             return None
         self.scheduler.commit(toks_np, ent.slot_request, ent.active, now=now)
-        rec = {"step": ent.step, "batch": int(ent.active.sum()),
-               "accept_rate": float(ent.stats.accept_rate),
-               "alpha_mean": float(ent.stats.alpha_mean),
-               "fallback_rate": float(ent.stats.fallback_rate)}
+        rec = {"step": ent.step, "batch": int(ent.active.sum())}
+        if ent.kind == "host":
+            rec.update(accept_rate=ent.res.accept_rate,
+                       alpha_mean=ent.res.alpha_mean,
+                       fallback_rate=ent.res.fallback_rate,
+                       stall_ms=ent.stall * 1e3,
+                       sampler_ms=ent.res.sampler_time * 1e3,
+                       transfer_ms=ent.res.transfer_time * 1e3)
+        else:
+            rec.update(accept_rate=float(ent.stats.accept_rate),
+                       alpha_mean=float(ent.stats.alpha_mean),
+                       fallback_rate=float(ent.stats.fallback_rate))
         if self._controller is not None:
             new_h = self._controller.observe(rec["alpha_mean"])
             if new_h:
+                # an in-flight ticket's workers read the pool's program at
+                # call time: join them BEFORE the swap so their microbatch
+                # samples against the hot set it was dispatched under
+                # (matching device mode, where the in-flight execution
+                # keeps the old traced program) — never a wall-clock race
+                self._resolve_host_pending()
                 from repro.core.hot_vocab import build_hot_set
                 self.decision.hot_set = build_hot_set(
                     self._hot_counts, new_h, self.cfg.vocab_size)
-                # hot-set shape changed: re-jit the decision programs
+                # hot-set shape changed: re-jit the decision programs on
+                # both sides of the client seam
                 self._jit_programs()
+                self.client.refresh()
                 rec["hot_size"] = new_h
         self.stats_log.append(rec)
         return rec

@@ -59,7 +59,8 @@ import numpy as np
 from repro.config import ModelConfig
 from repro.core import penalties as pen
 from repro.core.decision_plane import DecisionPlane
-from repro.core.host_sampler import HostSamplerPool, PoolResult, SampleTicket
+from repro.core.host_sampler import PoolResult, SampleTicket
+from repro.engine.decision_client import DecisionPlaneClient
 from repro.engine.engine import (EngineConfig, SlotParams, _insert_rows,
                                  generate_stream, prefill_new_rows)
 from repro.engine.paged_cache import (BlockAllocator, PagedCacheConfig,
@@ -79,7 +80,8 @@ class PipelineConfig(EngineConfig):
     stages: int = 2                   # p — pipeline stages
     microbatches: int = 0             # M in flight; 0 -> p (minimum legal)
     samplers: int = 2                 # m — host sampler pool workers
-    sampler_mode: str = "disaggregated"   # | "baseline" (sync, last stage)
+    sampler_mode: str = "disaggregated"   # -> client "host"; "baseline"
+    #                                   -> "device" (sync, last stage, Eq. 4)
 
 
 @dataclass
@@ -223,8 +225,6 @@ class PipelineEngine:
             "PipelineEngine: chunked prefill not supported (prompts " \
             "prefill through all stages in one program)"
         assert B % M == 0, f"max_batch={B} must divide into M={M} microbatches"
-        assert engine_cfg.sampler_mode in ("disaggregated", "baseline"), \
-            engine_cfg.sampler_mode
         self.p, self.M, self.R = p, M, B // M
         self.num_slots = B
         self.model = Model(model_cfg)
@@ -245,7 +245,13 @@ class PipelineEngine:
             sampling_parallelism=engine_cfg.sampling_parallelism,
             k_cap=min(engine_cfg.k_cap, model_cfg.vocab_size),
             seed=engine_cfg.seed)
-        self.pool = HostSamplerPool(self.decision, engine_cfg.samplers)
+        # the unified decision-plane client (§13): "host" ships last-stage
+        # logits to the CPU sampler pool ("disaggregated" is the historic
+        # spelling); "device" samples synchronously on the last stage's
+        # critical path ("baseline", Eq. 4)
+        self.client = DecisionPlaneClient(
+            self.decision, engine_cfg.sampler_mode, engine_cfg.samplers)
+        self.pool = self.client.pool
         self.planner = MicrobatchPlanner(p, M, self.R)
         S = engine_cfg.max_seq_len
         self._paged = engine_cfg.cache == "paged"
@@ -370,7 +376,8 @@ class PipelineEngine:
         observability stats (empty dict when no commit landed)."""
         c = self.planner.cycle
         self._cycle_rec = {"cycle": c, "busy": [None] * self.p,
-                           "stall": 0.0, "sample": 0.0, "sampler": None}
+                           "stall": 0.0, "sample": 0.0, "sampler": None,
+                           "transfer": None}
         rec: dict = {}
         for s in range(self.p - 1, -1, -1):
             i = self.planner.stage_for(c, s)
@@ -413,7 +420,12 @@ class PipelineEngine:
         yield from generate_stream(self, requests, max_steps)
 
     def close(self) -> None:
-        self.pool.close()
+        """Commit every in-flight microbatch, then shut down the
+        decision-plane client's sampler pool — the same contract as
+        :meth:`Engine.close`, so sampled-but-uncommitted tokens are never
+        silently dropped."""
+        self.flush()
+        self.client.close()
 
     # -- cycle internals ----------------------------------------------------
     def _reenter(self, i: int) -> Optional[dict]:
@@ -520,16 +532,16 @@ class PipelineEngine:
         args = (logits, self.pstate[i], sp.as_params(), sp.bias_array(),
                 rec.nonces, rec.positions, rec.exit_cycle,
                 rec.active)
-        if self.ecfg.sampler_mode == "baseline":
+        if not self.client.is_host:
             t0 = time.perf_counter()
-            mb.ready = self.pool.sample_sync(*args)
+            mb.ready = self.client.sample_sync(*args)
             dt = time.perf_counter() - t0
             if self._cycle_rec is not None:
                 self._cycle_rec["sample"] = dt
                 if self._cycle_rec["busy"][self.p - 1] is not None:
                     self._cycle_rec["busy"][self.p - 1] += dt
         else:
-            mb.ticket = self.pool.submit(*args)
+            mb.ticket = self.client.submit(*args)
 
     def _commit(self, i: int) -> dict:
         """Commit microbatch ``i``'s sampled token at its re-entry cycle;
@@ -547,6 +559,7 @@ class PipelineEngine:
         if self._cycle_rec is not None:
             self._cycle_rec["stall"] = stall
             self._cycle_rec["sampler"] = res.sampler_time
+            self._cycle_rec["transfer"] = res.transfer_time
         now = time.perf_counter()
         self.scheduler.commit(res.tokens, rec.slot_request, rec.active,
                               now=now)
@@ -558,7 +571,8 @@ class PipelineEngine:
                "alpha_mean": res.alpha_mean,
                "fallback_rate": res.fallback_rate,
                "stall_ms": stall * 1e3,
-               "sampler_ms": res.sampler_time * 1e3}
+               "sampler_ms": res.sampler_time * 1e3,
+               "transfer_ms": res.transfer_time * 1e3}
         self.stats_log.append(out)
         return out
 
@@ -659,7 +673,7 @@ class PipelineEngine:
             return {"cycles": 0, "bubble_frac": 0.0,
                     "stage_util": [0.0] * self.p, "mean_cycle_ms": 0.0,
                     "stall_ms_mean": 0.0, "sample_ms_mean": 0.0,
-                    "sampler_ms_mean": 0.0}
+                    "sampler_ms_mean": 0.0, "transfer_ms_mean": 0.0}
         busy = np.zeros((len(full), self.p))
         for k, r in enumerate(full):
             busy[k] = r["busy"]
@@ -667,6 +681,8 @@ class PipelineEngine:
         C = busy.max(axis=1)
         bubble = (C[:, None] - busy).sum() / (self.p * C.sum())
         samplers = [r["sampler"] for r in full if r["sampler"] is not None]
+        transfers = [r["transfer"] for r in full
+                     if r.get("transfer") is not None]
         return {
             "cycles": len(full),
             "bubble_frac": float(bubble),
@@ -675,6 +691,13 @@ class PipelineEngine:
             "stall_ms_mean": float(np.mean([r["stall"] for r in full]) * 1e3),
             "sample_ms_mean": float(np.mean([r["sample"] for r in full])
                                     * 1e3),
+            # pool-side decomposition (§13): sampler_ms is pure CPU
+            # sampling on the workers' critical path; transfer_ms is the
+            # device_get wait (in-flight compute + D2H) — previously
+            # conflated, which overstated the pool's cost in the bubble
+            # accounting
             "sampler_ms_mean": float(np.mean(samplers) * 1e3) if samplers
+            else 0.0,
+            "transfer_ms_mean": float(np.mean(transfers) * 1e3) if transfers
             else 0.0,
         }

@@ -35,6 +35,10 @@ class Request:
     prompt_offset: int = 0   # head tokens skipped at admission (chunked path)
     admit_wait: int = 0      # schedule() calls spent waiting (admission aging)
     admit_step: int = -1     # scheduler step of the latest admission
+    admit_time: Optional[float] = None  # wall clock of the FIRST admission —
+    #                          TTFT decomposes into queueing delay
+    #                          (admit_time − arrival_time) + prefill
+    #                          (benchmarks/fig_latency.py)
     preempt_count: int = 0   # times evicted under KV-block pressure (§9)
     truncated: bool = False  # stopped at cache capacity (paged decode, §9)
 

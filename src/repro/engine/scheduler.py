@@ -33,6 +33,7 @@ request (speculative slot reuse — DESIGN.md §2).
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from typing import Callable, List, Optional
 
@@ -195,6 +196,9 @@ class Scheduler:
                 slot = free.pop(0)
                 req.slot = slot
                 req.admit_step = self.step
+                if req.admit_time is None:    # first admission only — a
+                    # preemption resume is not fresh queueing delay
+                    req.admit_time = time.perf_counter()
                 self.slots[slot] = req
                 admitted.add(rank)
                 round_admits.append(req)

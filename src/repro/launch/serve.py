@@ -51,7 +51,7 @@ def build_engine(arch: str, reduced: bool, algorithm: str, batch: int,
                  prompt_chunk: int = 0, cache: str = "contiguous",
                  block_size: int = 16, num_blocks: int = 0,
                  stages: int = 1, microbatches: int = 0, samplers: int = 2,
-                 sampler_mode: str = "disaggregated"):
+                 sampler_mode: str = None):
     cfg = get_arch(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -62,7 +62,7 @@ def build_engine(arch: str, reduced: bool, algorithm: str, batch: int,
                   shvs=SHVSConfig(hot_size=min(1024, cfg.vocab_size // 4)),
                   k_cap=min(256, cfg.vocab_size), seed=seed,
                   cache=cache, block_size=block_size,
-                  num_blocks=num_blocks)
+                  num_blocks=num_blocks, samplers=samplers)
     if stages > 1 or microbatches:
         if prompt_chunk:
             raise ValueError(
@@ -70,10 +70,13 @@ def build_engine(arch: str, reduced: bool, algorithm: str, batch: int,
                 "--microbatches: the pipeline engine prefills prompts "
                 "monolithically (DESIGN.md §12)")
         ecfg = PipelineConfig(stages=stages, microbatches=microbatches,
-                              samplers=samplers, sampler_mode=sampler_mode,
+                              sampler_mode=sampler_mode or "host",
                               **common)
         return PipelineEngine(cfg, params, ecfg)
-    ecfg = EngineConfig(overlap=overlap, prompt_chunk=prompt_chunk, **common)
+    # single-stage default stays "device" (the §2 fused overlap loop);
+    # "host" disaggregates the decode-step sampling to the CPU pool (§13)
+    ecfg = EngineConfig(overlap=overlap, prompt_chunk=prompt_chunk,
+                        sampler_mode=sampler_mode or "device", **common)
     return Engine(cfg, params, ecfg)
 
 
@@ -134,11 +137,17 @@ def main() -> None:
                     help="microbatches in flight (0 = stages); "
                          "batch must divide into them")
     ap.add_argument("--samplers", type=int, default=2,
-                    help="host sampler pool workers (pipeline engine)")
-    ap.add_argument("--sampler-mode", choices=("disaggregated", "baseline"),
-                    default="disaggregated",
-                    help="pipeline sampling: host pool committed at "
-                         "re-entry, or synchronous on the last stage")
+                    help="host sampler pool workers (host sampler mode)")
+    ap.add_argument("--sampler-mode",
+                    choices=("device", "host", "disaggregated", "baseline"),
+                    default=None,
+                    help="decision-plane placement (DESIGN.md §13): "
+                         "'device' samples on the accelerator, 'host' "
+                         "disaggregates to the CPU sampler pool, committed "
+                         "one step (pipeline: one re-entry) behind. "
+                         "Default: device for the single-stage engine, "
+                         "host for --stages>1. 'disaggregated'/'baseline' "
+                         "are the historic pipeline spellings")
     ap.add_argument("--seed", type=int, default=None,
                     help="per-request sampling seeds (request i uses seed+i); "
                          "token streams become pure functions of the seed")
@@ -178,9 +187,10 @@ def main() -> None:
     pipelined = args.stages > 1 or args.microbatches
     if pipelined:
         mode = (f"pipeline p={eng.p} M={eng.M} "
-                f"samplers={args.samplers} ({args.sampler_mode})")
+                f"samplers={args.samplers} ({eng.client.mode} sampling)")
     else:
         mode = "overlapped" if args.overlap else "sequential"
+        mode += f", {eng.client.mode} sampling"
     chunk = f", prompt_chunk={args.prompt_chunk}" if args.prompt_chunk else ""
     kv = ""
     if args.cache == "paged":
@@ -196,9 +206,20 @@ def main() -> None:
         print(f"pipeline: bubble_frac={rep['bubble_frac']:.1%} over "
               f"{rep['cycles']} steady-state cycles, "
               f"cycle={rep['mean_cycle_ms']:.2f}ms, "
-              f"commit_stall={rep['stall_ms_mean']:.2f}ms")
+              f"commit_stall={rep['stall_ms_mean']:.2f}ms, "
+              f"sampler={rep['sampler_ms_mean']:.2f}ms "
+              f"(+{rep['transfer_ms_mean']:.2f}ms transfer)")
         print(f"per-stage utilization: {util}")
-        eng.close()
+    elif eng.client.is_host and eng.stats_log:
+        stalls = [s["stall_ms"] for s in eng.stats_log if "stall_ms" in s]
+        samp = [s["sampler_ms"] for s in eng.stats_log if "sampler_ms" in s]
+        xfer = [s["transfer_ms"] for s in eng.stats_log
+                if "transfer_ms" in s]
+        if stalls:
+            print(f"host sampler pool: commit_stall={np.mean(stalls):.2f}ms "
+                  f"sampler={np.mean(samp):.2f}ms "
+                  f"(+{np.mean(xfer):.2f}ms transfer) per step")
+    eng.close()
     if first_event_at is not None:
         print(f"first streamed event after {(first_event_at - t0) * 1e3:.1f}ms "
               f"({n_events} events)")

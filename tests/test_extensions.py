@@ -82,6 +82,39 @@ class TestHotSizeController:
         assert abs(np.log2(ctl.h_current / h_star)) < 0.75, \
             (ctl.h_current, h_star, ctl.history[-3:])
 
+    def test_ewma_reset_prevents_thrash_on_h_change(self):
+        """Regression (ISSUE 5): moving H must restart the observation
+        window. The old code kept ``_alpha_ewma`` — measured at the OLD
+        H — after the move, so the next fits chased a stale Zipf curve
+        and the controller thrashed across the hysteresis band
+        (497→283→366→448 on this exact deterministic trace)."""
+        V = 32768
+        ctl = HotSizeController(vocab_size=V, h_current=8192,
+                                adjust_every=2, hysteresis=0.25, ewma=0.1)
+
+        def drive(s_true, steps):
+            changes = []
+            for _ in range(steps):
+                alpha = zipf_alpha_curve(V, s_true,
+                                         np.asarray([ctl.h_current]))[0]
+                nh = ctl.observe(alpha)
+                if nh is not None:
+                    changes.append(nh)
+                    # the reset itself: EWMA cleared, window restarted
+                    assert ctl._alpha_ewma is None
+                    assert ctl._step == 0
+            return changes
+
+        # regime A: peaked workload — one decisive move, then silence
+        a = drive(1.6, 120)
+        assert len(a) == 1, f"thrash in a stationary regime: {a}"
+        # regime B: tail flattens — H climbs monotonically, no reversals,
+        # and converges in a few moves instead of stale-EWMA hunting
+        b = drive(1.05, 120)
+        assert b and b[-1] > a[-1]
+        assert all(x < y for x, y in zip(b, b[1:])), f"oscillation: {b}"
+        assert len(b) <= 3, f"stale-EWMA hunting: {b}"
+
     def test_domain_shift_reacts(self):
         """ᾱ collapse (domain shift, paper §9) must drive H upward."""
         V = 32768

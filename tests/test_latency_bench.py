@@ -1,0 +1,46 @@
+"""CI smoke for the open-loop latency benchmark (DESIGN.md §13):
+``benchmarks/fig_latency`` must run end-to-end, emit P50/P95/P99 for BOTH
+sampler modes, and append a machine-readable trajectory point. Marked
+``latency`` — tier-1 excludes it; CI runs it in its own step."""
+import json
+
+import pytest
+
+pytestmark = pytest.mark.latency
+
+
+def test_fig_latency_smoke_emits_tail_percentiles(tmp_path):
+    from benchmarks import fig_latency
+
+    out = tmp_path / "BENCH_latency.json"
+    emitted = []
+    rows = fig_latency.run(
+        emit_fn=lambda name, us, derived="": emitted.append(name),
+        smoke=True, out=str(out), rates=(8.0,), n_requests=8)
+
+    assert {r["mode"] for r in rows} == {"device", "host"}
+    for row in rows:
+        for metric in ("ttft_ms", "tpot_ms", "queue_ms"):
+            assert set(row[metric]) == {"p50", "p95", "p99"}
+            assert all(v >= 0.0 for v in row[metric].values())
+        assert row["tpot_ms"]["p50"] <= row["tpot_ms"]["p95"] \
+            <= row["tpot_ms"]["p99"]
+        assert row["tokens"] > 0 and row["throughput_tps"] > 0
+        # the sweep itself asserts host ≡ device streams; spot-check the
+        # payload made it into the row before the JSON strips it
+        assert row["streams"]
+    assert any(n.startswith("fig_latency.device.") for n in emitted)
+    assert any(n.startswith("fig_latency.host.") for n in emitted)
+
+    doc = json.loads(out.read_text())
+    assert doc["bench"] == "fig_latency"
+    point = doc["trajectory"][-1]
+    assert {r["mode"] for r in point["results"]} == {"device", "host"}
+    assert all("streams" not in r for r in point["results"])
+
+    # trajectory appends — a second point lands beside the first
+    fig_latency.write_trajectory(
+        [{k: v for k, v in r.items() if k != "streams"} for r in rows],
+        str(out))
+    doc = json.loads(out.read_text())
+    assert len(doc["trajectory"]) == 2

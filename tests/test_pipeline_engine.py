@@ -240,6 +240,21 @@ def test_planner_rejects_double_dispatch():
                          np.zeros(1, np.uint32), np.zeros(1, np.int32))
 
 
+def test_close_commits_in_flight_microbatches(model4):
+    """close() mid-run must flush (the Engine.close contract, §13): tokens
+    the pool already sampled commit instead of being dropped with the
+    threads."""
+    cfg, params = model4
+    eng = PipelineEngine(cfg, params, PipelineConfig(
+        max_batch=4, stages=2, microbatches=2, samplers=2, **_ENGINE_KW))
+    eng.submit(_reqs(cfg, n=4))
+    for _ in range(4):        # leaves microbatches mid-pipeline
+        eng.step()
+    assert eng.in_flight > 0
+    eng.close()
+    assert eng.in_flight == 0, "close() dropped in-flight tokens"
+
+
 def test_measured_bubble_disaggregated_below_baseline(model4):
     """The acceptance bar: on the executable pipeline, disaggregating the
     sampler strictly lowers the measured bubble fraction at p >= 2. A
