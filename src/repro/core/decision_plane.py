@@ -17,6 +17,9 @@ common to all backends —
   "truncation_first" — paper S2 only
   "shvs"             — S2 + S3 (the full SIMPLE decision plane)
   "gumbel"           — beyond-paper single-pass Gumbel fast path
+  "fused"            — the whole pipeline in one Pallas pass (§14); its
+                       ``fuses_penalties`` flag moves the Eq. 1 penalty
+                       application from the shell into the kernel
 
 The service is a separate jitted program from the model forward — the
 runtime can dispatch the next microbatch's forward while sampling for the
@@ -201,10 +204,18 @@ class DecisionPlane:
         u = draw_uniforms()
         u = shard_decision_state(u, self.parallelism)
 
-        z = pen.apply_penalties_rows(logits, state, core.repetition_penalty,
-                                     core.presence_penalty,
-                                     core.frequency_penalty)
-        tokens, stats = backend.step(z, core, u, step_idx=step_idx)
+        if backend.fuses_penalties:
+            # the backend applies Eq. 1 inside its own single pass: hand it
+            # raw (post-bias/mask) logits + the histogram state, and never
+            # materialize a penalized (B, V) intermediate
+            tokens, stats = backend.step(logits, core, u, step_idx=step_idx,
+                                         state=state)
+        else:
+            z = pen.apply_penalties_rows(logits, state,
+                                         core.repetition_penalty,
+                                         core.presence_penalty,
+                                         core.frequency_penalty)
+            tokens, stats = backend.step(z, core, u, step_idx=step_idx)
         state = pen.update_histograms(state, tokens, active)
         return tokens, state, stats
 

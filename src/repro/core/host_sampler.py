@@ -141,20 +141,44 @@ class HostSamplerPool:
     identical math full-width on the calling thread — the pipeline
     engine's ``baseline`` mode (sampling synchronously on the last stage,
     Eq. 4) and the two paths are bit-identical by construction.
+
+    ``backend_override`` selects a different registered sampler backend
+    for the POOL only (e.g. ``"fused"`` to run the single-pass kernel on
+    the host workers while the engine's own plane keeps its configured
+    algorithm). The override plane is cloned from the engine's plane at
+    every :meth:`refresh` — same seed, k_cap, SHVS config, and CURRENT
+    hot set — so its uniforms and histograms are bit-compatible and
+    autotune hot-set swaps propagate through the ordinary refresh hook.
+    Unknown names fail at construction (the registry's ``ValueError``),
+    not on a worker thread mid-serve.
     """
 
-    def __init__(self, plane: DecisionPlane, num_workers: int = 2):
+    def __init__(self, plane: DecisionPlane, num_workers: int = 2,
+                 backend_override: Optional[str] = None):
         self.plane = plane
+        self.backend_override = backend_override
         self.num_workers = max(1, num_workers)
         self._ex: Optional[ThreadPoolExecutor] = None
         self.refresh()
+
+    def _decision_plane(self) -> DecisionPlane:
+        """The plane the workers actually run: the engine's, or a clone
+        carrying the pool-level backend override."""
+        if self.backend_override is None:
+            return self.plane
+        return DecisionPlane(
+            self.plane.vocab_size, algorithm=self.backend_override,
+            shvs=self.plane.shvs_cfg, hot_set=self.plane.hot_set,
+            sampling_parallelism=self.plane.parallelism,
+            k_cap=self.plane.k_cap, seed=self.plane.seed)
 
     def refresh(self) -> None:
         """(Re-)jit the worker-side decision program. Call after the
         plane's configuration changed under the pool — e.g. the SHVS
         autotuner swapping ``hot_set`` — since the traced program captured
-        the backend as of trace time."""
-        plane = self.plane
+        the backend (and, with an override, the cloned plane) as of trace
+        time."""
+        plane = self._decision_plane()
 
         def _step(logits, state, params, bias, nonces, pos, step, active):
             tokens, state, stats = plane.step(

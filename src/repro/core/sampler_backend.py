@@ -22,6 +22,9 @@ Built-in backends:
   ``shvs``              S2 + S3 speculative hot-vocab sampling
                         (registered by ``repro.core.shvs``)
   ``gumbel``            beyond-paper single-pass Gumbel argmax fast path
+  ``fused``             the whole decision in ONE Pallas pass — penalties →
+                        temperature → truncation-first filter → Gumbel draw
+                        (``kernels/fused_kernel.py``, DESIGN.md §14)
 
 Contract invariants (pinned by ``tests/test_service_api.py``):
 
@@ -67,6 +70,14 @@ class SamplerBackend:
 
     name: str = "abstract"
 
+    #: a backend that applies Eq. 1 penalties itself, inside its own pass.
+    #: The service shell then skips ``apply_penalties_rows`` and hands the
+    #: backend RAW (post-bias/mask) logits plus the histogram ``state``
+    #: as a ``step(..., state=...)`` keyword — the fusion seam that lets a
+    #: single-pass kernel own the whole pipeline without the shell
+    #: materializing a penalized (B, V) intermediate.
+    fuses_penalties: bool = False
+
     def init_state(self, batch: int, vocab_size: int, prompt_tokens=None,
                    prompt_lens=None) -> pen.PenaltyState:
         """Per-batch decision state (token histograms for Eq. 5)."""
@@ -77,7 +88,9 @@ class SamplerBackend:
                                                           DecisionStats]:
         """Draw one token per row.
 
-        ``z``: penalized (NOT temperature-scaled) logits (B, V) f32.
+        ``z``: penalized (NOT temperature-scaled) logits (B, V) f32 — or,
+        for ``fuses_penalties`` backends, raw logits (the shell then also
+        passes ``state=`` with the penalty histograms).
         ``params``: the 7-field core controls (RNG tags already stripped).
         ``uniforms``: (B, 3) pre-generated uniforms — (accept, hot, tail)
         draws; backends that need fewer use a fixed subset so unrelated
@@ -164,6 +177,54 @@ class TruncationFirstBackend(SamplerBackend):
         stats = DecisionStats(jnp.ones(()), jnp.ones(()),
                               1.0 - res.exact.mean())
         return res.tokens, stats
+
+
+@register_backend("fused")
+class FusedBackend(SamplerBackend):
+    """The entire decision in ONE Pallas pass (DESIGN.md §14): penalties →
+    temperature → streaming top-K/masses → truncation-first filter →
+    restricted Gumbel-max draw, reading the (B, V) logits exactly once
+    with no (B, V) intermediate (``kernels/fused_kernel.py``).
+
+    ``fuses_penalties`` makes the service shell hand this backend raw
+    logits plus the histogram state; the kernel applies Eq. 1 in-tile with
+    the same float op order as ``apply_penalties_rows``, so greedy /
+    single-support rows stay bit-identical to the ``reference`` backend.
+    The stochastic draw is keyed only on the row's pre-generated uniform
+    and the candidate's vocab id, so tokens obey the engine's
+    batch-composition and cross-mode determinism contracts.
+
+    ``hot_set`` defaults exactly like the ``shvs`` backend so the fused
+    pass reports the same α statistic and plugs into the
+    ``HotSizeController`` autotune loop; re-resolution on hot-set swap
+    re-specializes the kernel (pinned by ``tests/test_fused_backend.py``).
+    """
+
+    name = "fused"
+    fuses_penalties = True
+
+    def __init__(self, *, vocab_size: int, k_cap: int = 1024, shvs=None,
+                 hot_set=None, block_b: int = 8, block_v: int = 2048, **_):
+        if hot_set is None:
+            from repro.config import SHVSConfig
+            from repro.core.shvs import make_hot_set
+            cfg = shvs if shvs is not None else SHVSConfig()
+            H = cfg.resolve_hot_size(vocab_size)
+            hot_set = make_hot_set(jnp.arange(H, dtype=jnp.int32), vocab_size)
+        self.hot_set = hot_set
+        self.k_cap = k_cap
+        self.block_b = block_b
+        self.block_v = block_v
+
+    def step(self, z, params, uniforms, *, step_idx, state):
+        from repro.kernels import ops
+        tokens, exact, alpha, kept = ops.fused_sample(
+            z, state.prompt_counts, state.output_counts, params,
+            uniforms[:, 1], self.hot_set.mask, k_cap=self.k_cap,
+            block_b=self.block_b, block_v=self.block_v)
+        stats = DecisionStats(jnp.ones(()), alpha.mean(),
+                              1.0 - exact.mean())
+        return tokens, stats
 
 
 @register_backend("gumbel")

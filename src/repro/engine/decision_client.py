@@ -63,13 +63,19 @@ class DecisionPlaneClient:
     pool's lifecycle, and the re-jit hook the autotuner needs. The pool's
     executor threads are started lazily on the first host-mode ``submit``,
     so a device-mode client costs nothing.
+
+    ``pool_algorithm`` applies a pool-level backend override: host-mode
+    workers draw with that registered backend (e.g. the single-pass
+    ``fused`` kernel) while the engine's own plane keeps its configured
+    algorithm — the ``--pool-algorithm`` serving knob (DESIGN.md §14).
     """
 
     def __init__(self, plane: DecisionPlane, mode: str = "device",
-                 workers: int = 2):
+                 workers: int = 2, pool_algorithm: Optional[str] = None):
         self.mode = canonical_sampler_mode(mode)
         self.plane = plane
-        self.pool = HostSamplerPool(plane, workers)
+        self.pool = HostSamplerPool(plane, workers,
+                                    backend_override=pool_algorithm)
 
     @property
     def is_host(self) -> bool:

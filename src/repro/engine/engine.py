@@ -110,6 +110,11 @@ class EngineConfig:
     #                                  program) | "host" (CPU sampler pool,
     #                                  committed one step behind)
     samplers: int = 2                # host-mode sampler pool workers
+    pool_algorithm: Optional[str] = None   # pool-level backend override:
+    #                                  host-mode workers draw with this
+    #                                  registered backend (e.g. "fused")
+    #                                  while the engine plane keeps
+    #                                  ``algorithm`` (DESIGN.md §14)
 
 
 def _bucket(n: int, mult: int) -> int:
@@ -342,7 +347,8 @@ class Engine:
         # off and ships logits to the client's CPU sampler pool, committing
         # one step behind exactly like the overlapped device loop
         self.client = DecisionPlaneClient(
-            self.decision, engine_cfg.sampler_mode, engine_cfg.samplers)
+            self.decision, engine_cfg.sampler_mode, engine_cfg.samplers,
+            pool_algorithm=engine_cfg.pool_algorithm)
         self._host = self.client.is_host
         self.cache = (init_paged_cache(model_cfg, B, self.pcfg)
                       if self._paged else self.model.init_cache(B, S))
@@ -359,7 +365,7 @@ class Engine:
         self.stats_log: List[dict] = []
         self._hot_counts = hot_counts
         self._controller = None
-        if autotune and engine_cfg.algorithm == "shvs":
+        if autotune and engine_cfg.algorithm in ("shvs", "fused"):
             from repro.core.autotune import HotSizeController
             assert hot_counts is not None, "autotune needs hot_counts"
             self._controller = HotSizeController(

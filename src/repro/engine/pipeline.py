@@ -250,7 +250,8 @@ class PipelineEngine:
         # spelling); "device" samples synchronously on the last stage's
         # critical path ("baseline", Eq. 4)
         self.client = DecisionPlaneClient(
-            self.decision, engine_cfg.sampler_mode, engine_cfg.samplers)
+            self.decision, engine_cfg.sampler_mode, engine_cfg.samplers,
+            pool_algorithm=engine_cfg.pool_algorithm)
         self.pool = self.client.pool
         self.planner = MicrobatchPlanner(p, M, self.R)
         S = engine_cfg.max_seq_len

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import penalty_kernel, shvs_kernel, gumbel_kernel
+from repro.kernels import fused_kernel
 from repro.kernels import ref  # noqa: F401  (re-exported for convenience)
 
 INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
@@ -64,6 +65,30 @@ def fused_shvs_masses(z, hot_mask, *, block_b: int = 8, block_v: int = 512):
         zp, hm, block_b=bb, block_v=min(block_v, zp.shape[1]),
         interpret=INTERPRET)
     return m[:B], s_hot[:B], s_tail[:B], tmax[:B]
+
+
+def fused_sample(logits, counts_p, counts_o, params, u_row, hot_mask, *,
+                 k_cap: int, block_b: int = 8, block_v: int = 2048):
+    """The fused single-pass sampling decision (kernel-backed, any (B, V)).
+
+    penalties → temperature → streaming top-K/masses → truncation-first
+    filter → Gumbel draw, in ONE read of the logits. ``params`` is the
+    7-field ``SamplingParams`` core struct; ``u_row`` is the (B,) uniform
+    column driving the draw. Oracle: ``ref.fused_sample_ref`` (bit-identical
+    by shared tile math). Returns (tokens, exact(bool), alpha, kept).
+    """
+    B, V = logits.shape
+    padded, bb = ref.fused_pad(
+        logits, counts_p, counts_o, params.repetition_penalty,
+        params.presence_penalty, params.frequency_penalty,
+        params.temperature, params.top_k, params.top_p, params.min_p,
+        u_row, hot_mask, block_b=block_b, block_v=block_v)
+    z = padded[0]
+    tokens, exact, alpha, kept = fused_kernel.fused_sample(
+        *padded, k_cap=min(k_cap, z.shape[1]), block_b=bb,
+        block_v=min(block_v, z.shape[1]), interpret=INTERPRET)
+    return (jnp.minimum(tokens[:B], V - 1), exact[:B] != 0, alpha[:B],
+            kept[:B])
 
 
 def fused_gumbel_argmax(z, seed, *, block_b: int = 8, block_v: int = 512):

@@ -5,6 +5,8 @@ These define the exact semantics the kernels must match (asserted by
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -74,3 +76,199 @@ def gumbel_argmax_ref(z, seed):
     u = _hash_uniform(seed, b, v)
     g = -jnp.log(-jnp.log(u))
     return jnp.argmax(z + g, axis=-1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Fused single-pass sampler (DESIGN.md §14): penalties → temperature →
+# streaming top-K + masses → truncation-first filter → restricted Gumbel draw.
+#
+# The helpers below are shared VERBATIM by the Pallas kernel body
+# (``fused_kernel.py``) and the tile-faithful oracle ``fused_sample_ref`` so
+# kernel and oracle are bit-identical by construction: both run the same jnp
+# ops over the same (block_b, block_v) tile sequence.
+# ---------------------------------------------------------------------------
+
+# decorrelates the fused draw's hash stream from the gumbel backend's
+FUSED_DRAW_SALT = 0x46555345
+
+
+def _u32_from_uniform(u):
+    """Map a pre-generated uniform in [0, 1) to a 24-bit integer row seed.
+
+    24 bits keeps the product exactly representable in f32 (no rounding up
+    to 2^24 for u -> 1), so the seed is a pure function of the uniform's
+    bits and identical across hosts/shards.
+    """
+    return (u * 16777216.0).astype(jnp.uint32)
+
+
+def streaming_mass_update(m, s_tot, s_hot, zs, hot_f):
+    """One online-softmax tile step (same rescaling as ``shvs_kernel``):
+    carries (m, s_tot, s_hot) — running max and total/hot exp-sums in the
+    basis exp(z − m). zs: (bb, bv) scaled logits; hot_f: (1|bb, bv) f32.
+    """
+    tile_max = jnp.max(zs, axis=-1)
+    m_new = jnp.maximum(m, tile_max)
+    scale = jnp.exp(m - m_new)
+    w = jnp.exp(zs - m_new[:, None])
+    s_tot = s_tot * scale + jnp.sum(w, axis=-1)
+    s_hot = s_hot * scale + jnp.sum(w * hot_f, axis=-1)
+    return m_new, s_tot, s_hot
+
+
+def topk_merge(vals, idx, tile_vals, tile_idx):
+    """Merge a vocab tile into the running per-row top-K buffer.
+
+    Buffer-first concatenation + stable descending sort means ties resolve
+    to the LOWEST vocabulary index (earlier tiles precede later ones, and
+    in-tile ids ascend), matching ``jnp.argmax`` tie-breaking — which is
+    what makes the fused greedy path bit-identical to the reference
+    backend's argmax. vals/idx: (bb, K); tile_vals/tile_idx: (bb, bv).
+    """
+    cat_v = jnp.concatenate([vals, tile_vals], axis=-1)
+    cat_i = jnp.concatenate([idx, tile_idx], axis=-1)
+    order = jnp.argsort(-cat_v, axis=-1, stable=True)[:, :vals.shape[-1]]
+    return (jnp.take_along_axis(cat_v, order, axis=-1),
+            jnp.take_along_axis(cat_i, order, axis=-1))
+
+
+def trunc_gumbel_draw(vals, idx, s_tot, top_k, top_p, min_p, temperature,
+                      row_seed):
+    """Truncation-first filter + restricted Gumbel-max draw on the merged
+    top-K buffer (the fused kernel's final-tile epilogue).
+
+    vals/idx: (B, K) descending buffer (values are penalized AND
+    temperature-scaled); s_tot: (B,) total exp-mass in the basis
+    exp(z − vals[:, 0]) (the buffer head IS the global max); row_seed:
+    (B,) uint32 per-row draw seeds. Filter semantics mirror
+    ``core.sampling.truncation_first_sample`` — top-k / nucleus / min-p
+    applied inside the truncated domain with the exclusive-prefix-mass
+    nucleus rule — and the draw replaces inverse-CDF with
+    argmax(vals + Gumbel) over the kept support, which samples the same
+    renormalized distribution exactly (Gumbel-max on a restricted support)
+    without a second normalization pass. Returns (tokens, exact, kept).
+    """
+    B, K = vals.shape
+    w = jnp.exp(vals - vals[:, :1])
+    pos = jax.lax.broadcasted_iota(jnp.int32, (B, K), 1)
+    kk = jnp.where(top_k > 0, jnp.minimum(top_k, K), K)
+    keep = pos < kk[:, None]
+    subset_total = jnp.sum(w * keep, axis=-1)
+    # with an explicit top-k the kept subset IS the support; otherwise the
+    # support is the full distribution, whose mass the streaming pass
+    # already accumulated (this is what makes one pass sufficient)
+    norm_total = jnp.where(top_k > 0, subset_total, s_tot)
+    p = w * keep / jnp.maximum(norm_total[:, None], 1e-30)
+    cum = jnp.cumsum(p, axis=-1)
+    keep &= (cum - p) < top_p[:, None]
+    keep &= p >= min_p[:, None] * p[:, :1]
+    # provable-exactness flags (same rules as truncation_first_sample)
+    mass_at_cap = subset_total / jnp.maximum(norm_total, 1e-30)
+    explicit_k = (top_k > 0) & (top_k <= K)
+    nucleus_ok = (top_p < 1.0) & \
+        (mass_at_cap >= jnp.minimum(top_p, 1.0) - 1e-7)
+    p_last = w[:, -1] / jnp.maximum(norm_total, 1e-30)
+    minp_ok = (min_p > 0.0) & (p_last < min_p * p[:, 0])
+    full_mass_ok = mass_at_cap >= 1.0 - 1e-7
+    exact = explicit_k | nucleus_ok | minp_ok | full_mass_ok
+    # restricted Gumbel-max: noise keyed on (salt, row seed, vocab id) only,
+    # so the draw is invariant to batch composition and row sharding
+    u = _hash_uniform(FUSED_DRAW_SALT, row_seed[:, None], idx)
+    g = -jnp.log(-jnp.log(u))
+    score = jnp.where(keep, vals + g, -jnp.inf)
+    jwin = jnp.argmax(score, axis=-1)
+    tokens = jnp.take_along_axis(idx, jwin[:, None], axis=-1)[:, 0]
+    tokens = jnp.where(temperature <= 0.0, idx[:, 0], tokens)
+    kept = jnp.sum(keep, axis=-1).astype(jnp.int32)
+    return tokens.astype(jnp.int32), exact, kept
+
+
+def fused_pad(logits, counts_p, counts_o, repetition, presence, frequency,
+              temperature, top_k, top_p, min_p, u_row, hot_mask, *,
+              block_b, block_v):
+    """Pad fused-sampler inputs to block multiples. Shared by the ops
+    wrapper and the oracle so both see bit-identical padded operands.
+
+    Padded vocab columns carry z=NEG_INF / counts=0 / cold hot-mask (zero
+    mass, never sampled for any live row); padded batch rows carry neutral
+    params. Returns (padded tuple, bb) with bb the resolved row block.
+    """
+    B, V = logits.shape
+    bb = min(block_b, B) if B % min(block_b, B) == 0 else 1
+
+    def padv(x, value):                      # vocab axis of (B, V) arrays
+        pad = (-x.shape[1]) % block_v
+        return x if pad == 0 else jnp.pad(x, ((0, 0), (0, pad)),
+                                          constant_values=value)
+
+    def padb(x, value):                      # batch axis of any leading-B
+        pad = (-x.shape[0]) % bb
+        if pad == 0:
+            return x
+        widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+        return jnp.pad(x, widths, constant_values=value)
+
+    z = padb(padv(logits.astype(jnp.float32), NEG_INF), NEG_INF)
+    cp = padb(padv(jnp.asarray(counts_p, jnp.int32), 0), 0)
+    co = padb(padv(jnp.asarray(counts_o, jnp.int32), 0), 0)
+    hotpad = (-hot_mask.shape[0]) % block_v
+    hot = jnp.asarray(hot_mask, jnp.int32)
+    if hotpad:
+        hot = jnp.pad(hot, (0, hotpad))
+    return (z, cp, co,
+            padb(repetition.astype(jnp.float32), 1.0),
+            padb(presence.astype(jnp.float32), 0.0),
+            padb(frequency.astype(jnp.float32), 0.0),
+            padb(temperature.astype(jnp.float32), 1.0),
+            padb(jnp.asarray(top_k, jnp.int32), 0),
+            padb(top_p.astype(jnp.float32), 1.0),
+            padb(min_p.astype(jnp.float32), 0.0),
+            padb(u_row.astype(jnp.float32), 0.5),
+            hot), bb
+
+
+@functools.partial(jax.jit, static_argnames=("k_cap", "block_b", "block_v"))
+def fused_sample_ref(logits, counts_p, counts_o, repetition, presence,
+                     frequency, temperature, top_k, top_p, min_p, u_row,
+                     hot_mask, *, k_cap, block_b=8, block_v=512):
+    """Tile-faithful oracle for the fused single-pass sampler.
+
+    This is the UNFUSED composition: ``penalty_ref`` materializes the full
+    penalized/scaled (B, V) tensor, then separate passes build the top-K
+    buffer and the streaming masses, then the shared epilogue filters and
+    draws. It walks vocabulary tiles in the same (block_v) order as the
+    kernel and calls the identical helper functions, so the two are
+    bit-identical — floating-point accumulation order and all.
+
+    logits: (B, V); counts_*: (B, V) int32; per-row params (B,); u_row:
+    (B,) pre-generated uniforms (the decision plane's column 1); hot_mask:
+    (V,) bool. Returns (tokens, exact, alpha, kept), each (B,).
+    """
+    B, V = logits.shape
+    (z, cp, co, rep, pres, freq, temp, tk, tp, mp, u, hot), bb = fused_pad(
+        logits, counts_p, counts_o, repetition, presence, frequency,
+        temperature, top_k, top_p, min_p, u_row, hot_mask,
+        block_b=block_b, block_v=block_v)
+    Bp, Vp = z.shape
+    K = min(k_cap, Vp)
+    zs = penalty_ref(z, cp, co, rep, pres, freq, temp)
+    m = jnp.full((Bp,), NEG_INF, jnp.float32)
+    s_tot = jnp.zeros((Bp,), jnp.float32)
+    s_hot = jnp.zeros((Bp,), jnp.float32)
+    vals = jnp.full((Bp, K), -jnp.inf, jnp.float32)
+    idx = jnp.full((Bp, K), Vp, jnp.int32)
+    for j in range(Vp // block_v):
+        sl = slice(j * block_v, (j + 1) * block_v)
+        hot_f = hot[sl].astype(jnp.float32)[None, :]
+        m, s_tot, s_hot = streaming_mass_update(m, s_tot, s_hot,
+                                                zs[:, sl], hot_f)
+        tile_idx = jnp.broadcast_to(
+            jnp.arange(j * block_v, (j + 1) * block_v, dtype=jnp.int32),
+            (Bp, block_v))
+        vals, idx = topk_merge(vals, idx, zs[:, sl], tile_idx)
+    # the streamed sums are in the basis exp(z − m) and the buffer head is
+    # that same running max (identical float), so s_tot needs no re-basis
+    tokens, exact, kept = trunc_gumbel_draw(vals, idx, s_tot, tk, tp, mp,
+                                            temp, _u32_from_uniform(u))
+    alpha = s_hot / jnp.maximum(s_tot, 1e-30)
+    return (jnp.minimum(tokens[:B], V - 1), exact[:B], alpha[:B], kept[:B])

@@ -25,7 +25,10 @@ Engine execution mode (DESIGN.md §2/§8/§9/§12):
 
 Per-request sampling contract (DESIGN.md §11):
 
-    --algorithm NAME            any registered sampler backend
+    --algorithm NAME            any registered sampler backend (e.g.
+                                ``fused`` = the single-pass kernel, §14)
+    --pool-algorithm NAME       pool-level override: host sampler workers
+                                draw with NAME, the engine keeps --algorithm
     --seed N                    per-request sampling seeds (request i gets
                                 N+i; streams are pure functions of the seed)
     --greedy                    argmax decoding for every request
@@ -51,7 +54,7 @@ def build_engine(arch: str, reduced: bool, algorithm: str, batch: int,
                  prompt_chunk: int = 0, cache: str = "contiguous",
                  block_size: int = 16, num_blocks: int = 0,
                  stages: int = 1, microbatches: int = 0, samplers: int = 2,
-                 sampler_mode: str = None):
+                 sampler_mode: str = None, pool_algorithm: str = None):
     cfg = get_arch(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -62,7 +65,8 @@ def build_engine(arch: str, reduced: bool, algorithm: str, batch: int,
                   shvs=SHVSConfig(hot_size=min(1024, cfg.vocab_size // 4)),
                   k_cap=min(256, cfg.vocab_size), seed=seed,
                   cache=cache, block_size=block_size,
-                  num_blocks=num_blocks, samplers=samplers)
+                  num_blocks=num_blocks, samplers=samplers,
+                  pool_algorithm=pool_algorithm)
     if stages > 1 or microbatches:
         if prompt_chunk:
             raise ValueError(
@@ -148,6 +152,12 @@ def main() -> None:
                          "Default: device for the single-stage engine, "
                          "host for --stages>1. 'disaggregated'/'baseline' "
                          "are the historic pipeline spellings")
+    ap.add_argument("--pool-algorithm", default=None,
+                    choices=registered_backends(),
+                    help="pool-level backend override (DESIGN.md §14): "
+                         "host-mode sampler workers draw with this backend "
+                         "(e.g. 'fused' for the single-pass kernel) while "
+                         "the engine plane keeps --algorithm")
     ap.add_argument("--seed", type=int, default=None,
                     help="per-request sampling seeds (request i uses seed+i); "
                          "token streams become pure functions of the seed")
@@ -167,7 +177,8 @@ def main() -> None:
                        block_size=args.block_size, num_blocks=args.num_blocks,
                        stages=args.stages, microbatches=args.microbatches,
                        samplers=args.samplers,
-                       sampler_mode=args.sampler_mode)
+                       sampler_mode=args.sampler_mode,
+                       pool_algorithm=args.pool_algorithm)
     reqs = synth_requests(args.requests, eng.cfg.vocab_size, args.max_new,
                           long_prompts=args.long_prompts, seed=args.seed,
                           greedy=args.greedy, stop_sequences=stop_sequences)

@@ -1,0 +1,148 @@
+"""Fused-backend service seams (DESIGN.md §14): hot-set re-specialization
+and the pool-level backend override.
+
+The fused kernel bakes the hot-vocab mask into its traced operands, so the
+SHVS autotuner's ``hot_set`` swap is a stale-operand hazard — the exact
+shape of PR 5's re-jit race, now at the backend layer. These tests pin:
+
+* a plane swapped INTO a hot set is bit-identical to a plane BUILT with
+  it (the ``(algorithm, id(hot_set))`` re-resolve key actually fires);
+* the pool's ``backend_override`` clone picks the swap up through the
+  ordinary ``refresh()`` hook, and is bit-identical to running the fused
+  backend on the device path directly.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import SamplingConfig, SHVSConfig
+from repro.core import penalties as pen
+from repro.core.decision_plane import DecisionPlane
+from repro.core.host_sampler import HostSamplerPool
+from repro.core.hot_vocab import build_hot_set
+from repro.core.sampling import SamplingParams
+from repro.core.shvs import make_hot_set
+
+pytestmark = pytest.mark.kernels
+
+V = 512
+
+
+def _plane(algorithm="fused", hot_set=None):
+    return DecisionPlane(V, algorithm=algorithm, shvs=SHVSConfig(hot_size=64),
+                         hot_set=hot_set, k_cap=64, seed=0)
+
+
+def _pool_inputs(B=8, seed=0, top_k=16):
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.normal(0, 2, (B, V)).astype(np.float32))
+    state = pen.PenaltyState(
+        prompt_counts=jnp.asarray(rng.integers(0, 2, (B, V)), jnp.int32),
+        output_counts=jnp.zeros((B, V), jnp.int32))
+    params = SamplingParams.broadcast(B, SamplingConfig(
+        temperature=0.9, top_k=top_k, repetition_penalty=1.2))
+    return (logits, state, params, None, np.arange(B, dtype=np.uint32),
+            np.zeros((B,), np.int32), 0, np.ones((B,), bool))
+
+
+def _swapped_hot_set(h=128, seed=7):
+    """A frequency-ranked hot set unlike the default prefix [0, H)."""
+    rng = np.random.default_rng(seed)
+    return build_hot_set(rng.random(V), h, V)
+
+
+class TestHotSwapRespecialization:
+    def test_plane_step_uses_swapped_hot_set(self):
+        """After ``plane.hot_set = <new>`` (the autotuner's move), the next
+        step must re-specialize the fused backend on the new mask — stats
+        and tokens bit-identical to a plane constructed with that hot set,
+        never the stale trace's."""
+        hot2 = _swapped_hot_set()
+        swapped = _plane()                       # default hot set first ...
+        fresh = _plane(hot_set=hot2)             # ... vs born on hot2
+        logits, state, params, *_ = _pool_inputs()
+        core = params.strip_rng()
+
+        t_before, _, s_before = swapped.step(logits, state, core, 0)
+        swapped.hot_set = hot2                   # the autotune swap
+        t_after, _, s_after = swapped.step(logits, state, core, 0)
+        t_want, _, s_want = fresh.step(logits, state, core, 0)
+
+        np.testing.assert_array_equal(np.asarray(t_after),
+                                      np.asarray(t_want))
+        assert float(s_after.alpha_mean) == float(s_want.alpha_mean)
+        # and the swap actually changed the operand (guards a vacuous pass:
+        # the default prefix hot set must measure a different hot mass)
+        assert float(s_before.alpha_mean) != float(s_after.alpha_mean)
+
+    def test_swap_back_and_forth_tracks_current_mask(self):
+        """Two swaps: the re-resolve key is (algorithm, id(hot_set)), so a
+        return to an equal-but-distinct hot set must still re-specialize
+        and reproduce the original stream exactly."""
+        plane = _plane()
+        logits, state, params, *_ = _pool_inputs(seed=3)
+        core = params.strip_rng()
+        t0, _, s0 = plane.step(logits, state, core, 0)
+        plane.hot_set = _swapped_hot_set()
+        plane.step(logits, state, core, 0)
+        # equal contents, different object identity
+        plane.hot_set = make_hot_set(jnp.arange(64, dtype=jnp.int32), V)
+        t2, _, s2 = plane.step(logits, state, core, 0)
+        np.testing.assert_array_equal(np.asarray(t0), np.asarray(t2))
+        assert float(s0.alpha_mean) == float(s2.alpha_mean)
+
+
+class TestPoolBackendOverride:
+    def test_override_matches_device_fused_bitwise(self):
+        """Host workers drawing with ``backend_override="fused"`` must be
+        bit-identical to the fused backend on the direct (full-width)
+        path: uniforms are (request, position)-keyed and the kernel is
+        row-local, so neither the worker sharding nor the clone may move
+        any token."""
+        over = HostSamplerPool(_plane("reference"), num_workers=3,
+                               backend_override="fused")
+        direct = HostSamplerPool(_plane("fused"), num_workers=1)
+        args = _pool_inputs(seed=1)
+        try:
+            got = over.submit(*args).result()
+            want = direct.sample_sync(*args)
+        finally:
+            over.close()
+            direct.close()
+        np.testing.assert_array_equal(got.tokens, want.tokens)
+        np.testing.assert_array_equal(np.asarray(got.state.output_counts),
+                                      np.asarray(want.state.output_counts))
+
+    def test_override_rejects_unknown_backend_at_construction(self):
+        with pytest.raises(ValueError, match="registered backends"):
+            HostSamplerPool(_plane("reference"),
+                            backend_override="not_a_backend")
+
+    def test_refresh_propagates_hot_swap_to_override_clone(self):
+        """The stale-operand regression at the pool seam: after the engine
+        swaps ``plane.hot_set`` and calls ``refresh()``, the override
+        clone must sample against the NEW hot set — bit-identical to a
+        pool built on it — and the worker program must have re-jitted."""
+        plane = _plane("reference")
+        pool = HostSamplerPool(plane, num_workers=2,
+                               backend_override="fused")
+        hot2 = _swapped_hot_set()
+        fresh = HostSamplerPool(_plane("reference", hot_set=hot2),
+                                num_workers=2, backend_override="fused")
+        args = _pool_inputs(seed=2)
+        try:
+            before_jit = pool._step_jit
+            stale = pool.submit(*args).result()
+            plane.hot_set = hot2              # the autotuner's swap ...
+            pool.refresh()                    # ... and the engine's hook
+            assert pool._step_jit is not before_jit, \
+                "refresh() must re-trace the worker program"
+            got = pool.submit(*args).result()
+            want = fresh.submit(*args).result()
+        finally:
+            pool.close()
+            fresh.close()
+        np.testing.assert_array_equal(got.tokens, want.tokens)
+        assert got.alpha_mean == want.alpha_mean
+        assert stale.alpha_mean != got.alpha_mean, \
+            "swap must actually change the measured hot mass"

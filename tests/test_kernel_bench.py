@@ -1,0 +1,85 @@
+"""CI smoke for the kernel benchmark: ``benchmarks/kernel_bench`` must run
+end-to-end, derive its HBM-pass counts from the kernel configuration (the
+hard-coded 9.0/3.0 constants are gone), show fused ≤ ½ the unfused passes
+on every tracked config, and append a machine-readable trajectory point.
+Marked ``kernels`` — tier-1 excludes it; CI runs it in the kernels step."""
+import json
+
+import pytest
+
+from benchmarks.kernel_bench import (KernelConfig, bytes_per_token_decision,
+                                     hbm_passes_fused, hbm_passes_unfused)
+
+pytestmark = pytest.mark.kernels
+
+
+class TestPassAccounting:
+    """The roofline column is a function of the kernel configuration —
+    toggling a stage must move exactly the passes that stage streams."""
+
+    def test_default_config_halves_traffic(self):
+        cfg = KernelConfig()
+        assert hbm_passes_fused(cfg) == 3.0       # z + prompt + output rows
+        assert hbm_passes_unfused(cfg) == 6.0
+        assert hbm_passes_fused(cfg) <= hbm_passes_unfused(cfg) / 2.0
+
+    def test_no_penalties_drops_count_reads(self):
+        cfg = KernelConfig(repetition=False, presence=False, frequency=False)
+        assert hbm_passes_fused(cfg) == 1.0       # the single z read
+        # unfused still pays read+write+topK+mass
+        assert hbm_passes_unfused(cfg) == 4.0
+
+    def test_repetition_alone_needs_both_count_rows(self):
+        only_rep = KernelConfig(presence=False, frequency=False)
+        only_pres = KernelConfig(repetition=False, frequency=False)
+        assert hbm_passes_fused(only_rep) == 3.0   # z + prompt + output
+        assert hbm_passes_fused(only_pres) == 2.0  # z + output
+        assert hbm_passes_unfused(only_rep) \
+            == hbm_passes_unfused(only_pres) + 1.0
+
+    def test_full_softmax_costs_more_unfused_same_fused(self):
+        tf, full = KernelConfig(), KernelConfig(truncation="full_softmax")
+        assert hbm_passes_unfused(full) > hbm_passes_unfused(tf)
+        assert hbm_passes_fused(full) == hbm_passes_fused(tf)
+
+    def test_hot_set_rides_in_the_fused_stream(self):
+        off, on = KernelConfig(), KernelConfig(hot_set=True)
+        assert hbm_passes_unfused(on) == hbm_passes_unfused(off) + 1.0
+        assert hbm_passes_fused(on) == hbm_passes_fused(off)
+
+    def test_bytes_per_token_scales_with_vocab(self):
+        assert bytes_per_token_decision(3.0, 1000) == 3.0 * 1000 * 4.0
+
+
+def test_kernel_bench_smoke_emits_schema(tmp_path):
+    from benchmarks import kernel_bench
+
+    out = tmp_path / "BENCH_kernels.json"
+    emitted = []
+    rows = kernel_bench.run(
+        emit_fn=lambda name, val, derived="": emitted.append(name),
+        smoke=True, out=str(out))
+
+    names = {r["config"] for r in rows}
+    assert {"default", "no_penalties", "full_softmax",
+            "shvs_hot_set"} <= names
+    for row in rows:
+        assert row["passes_fused"] <= row["passes_unfused"] / 2.0
+        assert row["traffic_cut"] >= 2.0
+        assert row["bytes_per_token_fused"] > 0
+    assert any(n.startswith("kernel.passes.") for n in emitted)
+    assert "kernel.fused_wall_us" in emitted
+    assert "kernel.v5e_hbm_passes" in emitted
+
+    doc = json.loads(out.read_text())
+    assert doc["bench"] == "kernel_bench"
+    point = doc["trajectory"][-1]
+    assert point["schema"] == 1
+    assert point["timing"]["fused_wall_us"] > 0
+    assert {r["config"] for r in point["results"]} == names
+
+    # the trajectory appends — a second run must not clobber the first
+    kernel_bench.run(emit_fn=lambda *a, **k: None, smoke=True,
+                     out=str(out))
+    doc = json.loads(out.read_text())
+    assert len(doc["trajectory"]) == 2

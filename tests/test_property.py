@@ -280,6 +280,67 @@ def test_affine_fit_recovers_parameters(data):
     assert abs(c_fit - c) < 1e-12 + 0.01 * c
 
 
+@pytest.mark.kernels
+@given(st.data())
+@settings(max_examples=20, deadline=None)
+def test_fused_single_pass_equals_unfused_composition(data):
+    """The fused Pallas kernel ≡ the unfused ``kernels/ref.py`` composition
+    BITWISE on all four outputs (tokens, exact, alpha, kept) across shapes,
+    dtypes, block sizes, hot-set densities, and adversarial logits (±inf
+    injections, fully-masked rows, τ=0 greedy rows, top_k=1 forced rows).
+    The oracle walks the same vocab tiles with the same helpers, so any
+    drift — a missed re-basis, a stale operand, a reordered accumulation —
+    breaks exact equality."""
+    import jax.numpy as jnp
+    from repro.kernels import ops, ref
+
+    B = data.draw(st.integers(1, 5))
+    V = data.draw(st.sampled_from([128, 192, 384, 512, 1024]))
+    block_v = data.draw(st.sampled_from([128, 256, 512]))
+    k_cap = data.draw(st.sampled_from([8, 16, 64, 200]))
+    dtype = data.draw(st.sampled_from([jnp.float32, jnp.bfloat16]))
+    hot_frac = data.draw(st.sampled_from([0.0, 0.25, 1.0]))
+    seed = data.draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+
+    z = rng.normal(0, 4, (B, V)).astype(np.float32)
+    if data.draw(st.booleans()):          # adversarial injections
+        z.flat[rng.integers(0, z.size, 3)] = np.inf
+        z.flat[rng.integers(0, z.size, 3)] = -np.inf
+        z[rng.integers(0, B)] = -1e30     # an all-masked row
+    z = jnp.asarray(z).astype(dtype)
+    cp = jnp.asarray(rng.integers(0, 3, (B, V)), jnp.int32)
+    co = jnp.asarray(rng.integers(0, 3, (B, V)), jnp.int32)
+    temp = rng.uniform(0.3, 1.5, B).astype(np.float32)
+    top_k = rng.integers(0, 32, B).astype(np.int32)
+    if data.draw(st.booleans()):
+        temp[rng.integers(0, B)] = 0.0    # a greedy row
+        top_k[rng.integers(0, B)] = 1     # a forced row
+    params = SamplingParams(
+        temperature=jnp.asarray(temp),
+        top_k=jnp.asarray(top_k),
+        top_p=jnp.asarray(rng.uniform(0.7, 1.0, B), jnp.float32),
+        min_p=jnp.asarray(rng.uniform(0.0, 0.1, B), jnp.float32),
+        repetition_penalty=jnp.asarray(rng.uniform(1.0, 2.0, B),
+                                       jnp.float32),
+        presence_penalty=jnp.asarray(rng.uniform(0, 1, B), jnp.float32),
+        frequency_penalty=jnp.asarray(rng.uniform(0, 0.5, B), jnp.float32))
+    u = jnp.asarray(rng.random(B), jnp.float32)
+    hot = jnp.asarray(rng.random(V) < hot_frac)
+
+    got = ops.fused_sample(z, cp, co, params, u, hot, k_cap=k_cap,
+                           block_v=block_v)
+    want = ref.fused_sample_ref(
+        z, cp, co, params.repetition_penalty, params.presence_penalty,
+        params.frequency_penalty, params.temperature, params.top_k,
+        params.top_p, params.min_p, u, hot, k_cap=k_cap, block_v=block_v)
+    for g, w, name in zip(got, want, ("tokens", "exact", "alpha", "kept")):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                      err_msg=name)
+    toks = np.asarray(got[0])
+    assert ((toks >= 0) & (toks < V)).all()
+
+
 @given(st.data())
 @settings(max_examples=15, deadline=None)
 def test_sizing_model_hstar_is_argmin(data):

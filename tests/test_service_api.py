@@ -30,7 +30,8 @@ from repro.engine import Engine, GenerationEvent, Request, SlotParams
 from repro.engine.engine import EngineConfig
 from repro.models.model import Model
 
-BUILTIN_BACKENDS = ("gumbel", "reference", "shvs", "truncation_first")
+BUILTIN_BACKENDS = ("fused", "gumbel", "reference", "shvs",
+                    "truncation_first")
 
 
 def _backends_under_test():
