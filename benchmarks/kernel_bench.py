@@ -121,10 +121,26 @@ def _accounting_rows(vocab: int) -> list:
     return rows
 
 
+def _exec_modes() -> dict:
+    """Execution mode of each timed side. The fused kernel runs under
+    Pallas (interpret-mode grid emulation on CPU unless compiled); the
+    unfused composition is ordinary XLA. The two are DIFFERENT execution
+    substrates, so their wall clocks are separate per-mode trend columns —
+    never a cross-mode ratio (the PR-6 trajectory point compared them
+    directly and "showed" the fused kernel 14% slower, an artifact of
+    interpret-mode emulation, not the kernel)."""
+    return {"fused_exec_mode":
+            "pallas_interpret" if ops.INTERPRET else "pallas_compiled",
+            "unfused_exec_mode": "xla"}
+
+
 def _wall_times(B: int, V: int, k_cap: int, hot_size: int) -> dict:
-    """Fused Pallas pass vs the unfused ``kernels/ref.py`` composition,
+    """Fused Pallas pass and the unfused ``kernels/ref.py`` composition on
     identical operands (the differential-identity pair from
-    ``tests/test_kernels.py``), median wall time per call."""
+    ``tests/test_kernels.py``) — each timed ONLY against its own past
+    points (see :func:`_exec_modes`), median wall time per call at the
+    ``time_jitted`` default iteration count (the old iters=3/warmup=1
+    run was noise-dominated on top of being cross-mode)."""
     z = zipf_logits(B, V)
     rng = np.random.default_rng(0)
     cp = jnp.asarray(rng.integers(0, 2, (B, V)), jnp.int32)
@@ -152,9 +168,10 @@ def _wall_times(B: int, V: int, k_cap: int, hot_size: int) -> dict:
                                     tp, mp, u, hot, k_cap=k_cap,
                                     block_v=2048)
 
-    t_fus = time_jitted(fused, iters=3, warmup=1)
-    t_unf = time_jitted(unfused, iters=3, warmup=1)
+    t_fus = time_jitted(fused)
+    t_unf = time_jitted(unfused)
     return {"B": B, "V": V, "k_cap": k_cap, "hot_size": hot_size,
+            **_exec_modes(),
             "fused_wall_us": t_fus * 1e6, "unfused_wall_us": t_unf * 1e6}
 
 
@@ -163,7 +180,9 @@ def write_trajectory(rows: list, timing: dict,
     """Append one trajectory point (accounting sweep + timed shapes) to
     ``out`` — the kernel bench history future PRs diff against."""
     point = {
-        "bench": "kernel_bench", "schema": 1,
+        # schema 2: timing carries {fused,unfused}_exec_mode and the two
+        # wall clocks are per-mode trend columns (no cross-mode ratio)
+        "bench": "kernel_bench", "schema": 2,
         "completed_unix": int(time.time()),
         "timing": timing,
         "results": rows,
@@ -196,10 +215,13 @@ def run(emit_fn=emit, smoke: bool = False,
     timing = _wall_times(B, V, k_cap=64 if smoke else 1024,
                          hot_size=min(V // 4, 16_384))
     emit_fn("kernel.fused_wall_us", timing["fused_wall_us"],
-            f"Pallas interpret mode, B={B} V={V} (trend only — "
-            f"see passes.* for the roofline)")
+            f"{timing['fused_exec_mode']}, B={B} V={V} — per-mode trend "
+            f"column, NOT comparable to unfused_wall_us (different "
+            f"execution substrate; see passes.* for the roofline)")
     emit_fn("kernel.unfused_wall_us", timing["unfused_wall_us"],
-            f"ref.fused_sample_ref composition under XLA, B={B} V={V}")
+            f"{timing['unfused_exec_mode']} "
+            f"(ref.fused_sample_ref composition), B={B} V={V} — per-mode "
+            f"trend column")
     default = rows[0]
     emit_fn("kernel.v5e_hbm_passes", default["passes_fused"],
             f"unfused {default['passes_unfused']:.0f} passes "

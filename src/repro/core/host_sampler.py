@@ -97,6 +97,14 @@ class SampleTicket:
     def done(self) -> bool:
         return all(f.done() for f in self._futures)
 
+    def wait(self) -> None:
+        """Join every shard worker without assembling the result — the
+        drain step of the client's mode-switch / resize discipline (§15):
+        after this, no worker thread can still be reading the pool's
+        traced program or the plane's operands."""
+        for f in self._futures:
+            f.result()
+
     def result(self) -> PoolResult:
         parts: List[_ShardResult] = [f.result() for f in self._futures]
         tokens = np.concatenate([p.tokens for p in parts])
@@ -251,6 +259,22 @@ class HostSamplerPool:
                           sampler_time=part.sampler_time,
                           transfer_time=part.transfer_time,
                           active_rows=part.active_rows)
+
+    def resize(self, num_workers: int) -> None:
+        """Change the worker count online (the §15 controller's pool-sizing
+        knob). Joins any in-flight shard work — ``shutdown(wait=True)``
+        drains the executor's queue, and completed futures keep their
+        results, so outstanding tickets still resolve — then recycles the
+        executor lazily at the new width on the next submit. Bit-identity
+        is untouched: sharding is row-local (S1), so the worker count can
+        never move a request's stream (``test_worker_count_invariance``)."""
+        n = max(1, int(num_workers))
+        if n == self.num_workers:
+            return
+        if self._ex is not None:
+            self._ex.shutdown(wait=True)
+            self._ex = None
+        self.num_workers = n
 
     def close(self) -> None:
         if self._ex is not None:

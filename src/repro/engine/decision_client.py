@@ -27,7 +27,7 @@ stream (``tests/test_decision_client.py``, ``tests/test_pipeline_engine.py``).
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import List, Optional
 
 import numpy as np
 
@@ -76,6 +76,7 @@ class DecisionPlaneClient:
         self.plane = plane
         self.pool = HostSamplerPool(plane, workers,
                                     backend_override=pool_algorithm)
+        self._tickets: List[SampleTicket] = []   # outstanding host work
 
     @property
     def is_host(self) -> bool:
@@ -89,8 +90,46 @@ class DecisionPlaneClient:
         Never blocks: ``logits`` may still be an in-flight device future —
         the pool's workers block on it, not the caller."""
         assert self.is_host, "submit() is the host-mode path"
-        return self.pool.submit(logits, state, params, bias, nonces, pos,
-                                step, active)
+        ticket = self.pool.submit(logits, state, params, bias, nonces, pos,
+                                  step, active)
+        # track outstanding tickets so a mode switch / pool resize can
+        # drain them (bounded: prune landed work — at most the engines'
+        # in-flight depth, 1 step or M microbatches, survives a prune)
+        self._tickets = [t for t in self._tickets if not t.done]
+        self._tickets.append(ticket)
+        return ticket
+
+    def drain(self) -> None:
+        """Join every outstanding ticket's shard workers. Callers that hold
+        the tickets still own installing their results; this only
+        guarantees no worker thread is mid-shard."""
+        for t in self._tickets:
+            t.wait()
+        self._tickets = []
+
+    def set_mode(self, mode: str) -> bool:
+        """Re-route the sampling seam online (DESIGN.md §15): switch
+        between the fused on-device decision and the host pool. Drains the
+        in-flight ticket(s) BEFORE re-routing — the same join-before-re-jit
+        discipline as hot-set swaps (§13) — so a dispatched step always
+        completes under the placement it was dispatched with, and
+        bit-identity survives mid-run switches. Returns True iff the mode
+        changed. The engines' own commit bookkeeping is per-dispatch
+        (``_Pending.kind`` / per-microbatch tickets), so mixed-placement
+        in-flight work commits correctly on either side of the switch."""
+        mode = canonical_sampler_mode(mode)
+        if mode == self.mode:
+            return False
+        self.drain()
+        self.mode = mode
+        return True
+
+    def resize_pool(self, workers: int) -> None:
+        """Resize the host sampler pool online (the §15 controller's
+        second knob); drains outstanding tickets first so no in-flight
+        shard is cancelled by the executor recycle."""
+        self.drain()
+        self.pool.resize(workers)
 
     def sample_sync(self, logits, state, params, bias, nonces, pos, step,
                     active) -> PoolResult:

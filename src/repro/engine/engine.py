@@ -78,7 +78,8 @@ from repro.core.decision_plane import DecisionPlane
 from repro.core.host_sampler import PoolResult, SampleTicket
 from repro.core.sampling import SamplingParams
 from repro.core import penalties as pen
-from repro.engine.decision_client import DecisionPlaneClient
+from repro.engine.decision_client import (DecisionPlaneClient,
+                                          canonical_sampler_mode)
 from repro.engine.paged_cache import (BlockAllocator, PagedCacheConfig,
                                       init_paged_cache)
 from repro.engine.request import Request, RequestState
@@ -105,10 +106,14 @@ class EngineConfig:
     block_size: int = 16             # paged: tokens per KV block
     num_blocks: int = 0              # paged pool size; 0 = memory-equal to
     #                                  the contiguous cache (B * S / bs)
-    sampler_mode: str = "device"     # decision plane placement (§13):
+    sampler_mode: str = "device"     # decision plane placement (§13/§15):
     #                                  "device" (fused into the decode
     #                                  program) | "host" (CPU sampler pool,
-    #                                  committed one step behind)
+    #                                  committed one step behind) |
+    #                                  "adaptive" (a DecisionPlaneController
+    #                                  switches placement and resizes the
+    #                                  pool online from the engine's own
+    #                                  stat streams)
     samplers: int = 2                # host-mode sampler pool workers
     pool_algorithm: Optional[str] = None   # pool-level backend override:
     #                                  host-mode workers draw with this
@@ -346,9 +351,14 @@ class Engine:
         # fused into the decode program (§2); host mode splits the forward
         # off and ships logits to the client's CPU sampler pool, committing
         # one step behind exactly like the overlapped device loop
+        # "adaptive" (§15) starts on device — the winning placement at
+        # light load, where there is no sampling work to overlap — and
+        # lets the controller disaggregate online under queue pressure
+        self._adaptive = engine_cfg.sampler_mode == "adaptive"
         self.client = DecisionPlaneClient(
-            self.decision, engine_cfg.sampler_mode, engine_cfg.samplers,
-            pool_algorithm=engine_cfg.pool_algorithm)
+            self.decision,
+            "device" if self._adaptive else engine_cfg.sampler_mode,
+            engine_cfg.samplers, pool_algorithm=engine_cfg.pool_algorithm)
         self._host = self.client.is_host
         self.cache = (init_paged_cache(model_cfg, B, self.pcfg)
                       if self._paged else self.model.init_cache(B, S))
@@ -365,12 +375,23 @@ class Engine:
         self.stats_log: List[dict] = []
         self._hot_counts = hot_counts
         self._controller = None
+        hot = None
         if autotune and engine_cfg.algorithm in ("shvs", "fused"):
             from repro.core.autotune import HotSizeController
             assert hot_counts is not None, "autotune needs hot_counts"
-            self._controller = HotSizeController(
+            hot = HotSizeController(
                 vocab_size=model_cfg.vocab_size,
                 h_current=int(self.decision.hot_set.size))
+        self._dpc = None
+        if self._adaptive:
+            # global decision-plane controller (§15): placement + pool
+            # sizing from the per-step stat streams, H* as a sub-policy
+            from repro.core.autotune import DecisionPlaneController
+            self._dpc = DecisionPlaneController(
+                mode=self.client.mode, samplers=engine_cfg.samplers,
+                queue_high=float(engine_cfg.max_batch), hot=hot)
+        else:
+            self._controller = hot
 
     def _jit_programs(self) -> None:
         # last_tokens / nonces / pos are never donated — pending commits hold
@@ -750,22 +771,76 @@ class Engine:
         if self._controller is not None:
             new_h = self._controller.observe(rec["alpha_mean"])
             if new_h:
-                # an in-flight ticket's workers read the pool's program at
-                # call time: join them BEFORE the swap so their microbatch
-                # samples against the hot set it was dispatched under
-                # (matching device mode, where the in-flight execution
-                # keeps the old traced program) — never a wall-clock race
-                self._resolve_host_pending()
-                from repro.core.hot_vocab import build_hot_set
-                self.decision.hot_set = build_hot_set(
-                    self._hot_counts, new_h, self.cfg.vocab_size)
-                # hot-set shape changed: re-jit the decision programs on
-                # both sides of the client seam
-                self._jit_programs()
-                self.client.refresh()
+                self._apply_hot_size(new_h)
                 rec["hot_size"] = new_h
+        if self._dpc is not None:
+            nan = float("nan")
+            act = self._dpc.observe(
+                queue_depth=float(len(self.scheduler.waiting)),
+                queue_delay_ms=self._queue_delay_ms(),
+                batch=float(rec["batch"]),
+                stall_ms=rec.get("stall_ms", nan),
+                sampler_ms=rec.get("sampler_ms", nan),
+                transfer_ms=rec.get("transfer_ms", nan),
+                alpha_mean=rec["alpha_mean"])
+            if act:
+                if act.hot_size is not None:
+                    self._apply_hot_size(act.hot_size)
+                    rec["hot_size"] = act.hot_size
+                if act.samplers is not None:
+                    # resolving first keeps the drained ticket's result
+                    # installed before the executor recycle
+                    self._resolve_host_pending()
+                    self.client.resize_pool(act.samplers)
+                    rec["samplers"] = act.samplers
+                if act.sampler_mode is not None:
+                    self.set_sampler_mode(act.sampler_mode)
+                    rec["sampler_mode"] = act.sampler_mode
         self.stats_log.append(rec)
         return rec
+
+    def set_sampler_mode(self, mode: str) -> bool:
+        """Re-route the decision plane online (§15): resolve the in-flight
+        host ticket FIRST — after a host->device switch ``self._host`` goes
+        False and the top-of-step resolution would never fire for a
+        stranded ticket — then re-route the client. The per-entry
+        ``_Pending.kind`` makes mixed-placement in-flight work commit
+        correctly on either side, so the switch cannot move any request's
+        stream. Returns True iff the mode changed."""
+        mode = canonical_sampler_mode(mode)
+        if mode == self.client.mode:
+            return False
+        self._resolve_host_pending()
+        self.client.set_mode(mode)
+        self._host = self.client.is_host
+        return True
+
+    def _apply_hot_size(self, new_h: int) -> None:
+        """Swap the SHVS hot set to ``new_h`` ids and re-jit. An in-flight
+        ticket's workers read the pool's program at call time: join them
+        BEFORE the swap so their microbatch samples against the hot set it
+        was dispatched under (matching device mode, where the in-flight
+        execution keeps the old traced program) — never a wall-clock
+        race."""
+        self._resolve_host_pending()
+        from repro.core.hot_vocab import build_hot_set
+        self.decision.hot_set = build_hot_set(
+            self._hot_counts, new_h, self.cfg.vocab_size)
+        # hot-set shape changed: re-jit the decision programs on both
+        # sides of the client seam
+        self._jit_programs()
+        self.client.refresh()
+
+    def _queue_delay_ms(self) -> float:
+        """Oldest waiting request's queueing delay. 0 with an empty queue;
+        NaN when arrivals carry no wall-clock stamps (offline traces leave
+        ``arrival_time`` at 0.0), which the controller ignores."""
+        if not self.scheduler.waiting:
+            return 0.0
+        now = time.perf_counter()
+        ds = [now - r.arrival_time
+              for r in self.scheduler.waiting if r.arrival_time]
+        return max(ds) * 1e3 if ds else float("nan")
 
     # -- admission ------------------------------------------------------------
     def _admit(self, new_requests: List[Request]) -> None:

@@ -81,7 +81,9 @@ class PipelineConfig(EngineConfig):
     microbatches: int = 0             # M in flight; 0 -> p (minimum legal)
     samplers: int = 2                 # m — host sampler pool workers
     sampler_mode: str = "disaggregated"   # -> client "host"; "baseline"
-    #                                   -> "device" (sync, last stage, Eq. 4)
+    #                                   -> "device" (sync, last stage, Eq. 4);
+    #                                   "adaptive" -> §15 controller switches
+    #                                   placement / resizes the pool online
 
 
 @dataclass
@@ -249,9 +251,14 @@ class PipelineEngine:
         # logits to the CPU sampler pool ("disaggregated" is the historic
         # spelling); "device" samples synchronously on the last stage's
         # critical path ("baseline", Eq. 4)
+        # "adaptive" (§15) starts on host — the pipeline's structural win
+        # (Eq. 4: synchronous sampling caps the cycle) — and lets the
+        # controller fall back to device / resize the pool online
+        self._adaptive = engine_cfg.sampler_mode == "adaptive"
         self.client = DecisionPlaneClient(
-            self.decision, engine_cfg.sampler_mode, engine_cfg.samplers,
-            pool_algorithm=engine_cfg.pool_algorithm)
+            self.decision,
+            "host" if self._adaptive else engine_cfg.sampler_mode,
+            engine_cfg.samplers, pool_algorithm=engine_cfg.pool_algorithm)
         self.pool = self.client.pool
         self.planner = MicrobatchPlanner(p, M, self.R)
         S = engine_cfg.max_seq_len
@@ -306,6 +313,12 @@ class PipelineEngine:
         self.stats_log: List[dict] = []
         self.cycle_log: List[dict] = []
         self._cycle_rec: Optional[dict] = None
+        self._dpc = None
+        if self._adaptive:
+            from repro.core.autotune import DecisionPlaneController
+            self._dpc = DecisionPlaneController(
+                mode=self.client.mode, samplers=engine_cfg.samplers,
+                queue_high=float(B))
 
     # -- jitted stage body ---------------------------------------------------
     def _make_stage_impl(self, s: int):
@@ -575,7 +588,50 @@ class PipelineEngine:
                "sampler_ms": res.sampler_time * 1e3,
                "transfer_ms": res.transfer_time * 1e3}
         self.stats_log.append(out)
+        if self._dpc is not None:
+            act = self._dpc.observe(
+                queue_depth=float(len(self.scheduler.waiting)),
+                queue_delay_ms=self._queue_delay_ms(),
+                batch=float(out["batch"]),
+                stall_ms=out["stall_ms"], sampler_ms=out["sampler_ms"],
+                transfer_ms=out["transfer_ms"],
+                bubble_frac=self._last_bubble(),
+                alpha_mean=out["alpha_mean"])
+            if act:
+                # the client drains outstanding tickets before re-routing /
+                # recycling the executor; per-microbatch tickets already
+                # resolved keep their results, so every in-flight
+                # microbatch still commits under its dispatch placement
+                if act.samplers is not None:
+                    self.client.resize_pool(act.samplers)
+                    out["samplers"] = act.samplers
+                if act.sampler_mode is not None:
+                    self.client.set_mode(act.sampler_mode)
+                    out["sampler_mode"] = act.sampler_mode
         return out
+
+    def _queue_delay_ms(self) -> float:
+        """Oldest waiting request's queueing delay (the §15 controller's
+        primary saturation signal); NaN when arrivals carry no wall-clock
+        stamps."""
+        if not self.scheduler.waiting:
+            return 0.0
+        now = time.perf_counter()
+        ds = [now - r.arrival_time
+              for r in self.scheduler.waiting if r.arrival_time]
+        return max(ds) * 1e3 if ds else float("nan")
+
+    def _last_bubble(self) -> float:
+        """Bubble fraction of the most recent FULL cycle (every stage
+        timed), Eq. 4's ``Σ_s (C − busy_s) / (p·C)``; NaN during fill."""
+        for r in reversed(self.cycle_log[-2 * self.M:]):
+            if all(b is not None for b in r["busy"]):
+                busy = np.asarray(r["busy"], float)
+                busy[0] += r["stall"]
+                C = float(busy.max())
+                if C > 0:
+                    return float((C - busy).sum() / (self.p * C))
+        return float("nan")
 
     # -- admission -----------------------------------------------------------
     def _prefill_impl(self, params, tokens, true_lens):

@@ -21,7 +21,9 @@ Engine execution mode (DESIGN.md §2/§8/§9/§12):
     --microbatches M            microbatches in flight (0 = P); batch % M = 0
     --samplers M                host sampler pool workers (pipeline)
     --sampler-mode MODE         disaggregated (host pool, default) or
-                                baseline (sync on the last stage, Eq. 4)
+                                baseline (sync on the last stage, Eq. 4);
+                                adaptive = §15 controller switches placement
+                                and pool size online from the stat streams
 
 Per-request sampling contract (DESIGN.md §11):
 
@@ -143,12 +145,15 @@ def main() -> None:
     ap.add_argument("--samplers", type=int, default=2,
                     help="host sampler pool workers (host sampler mode)")
     ap.add_argument("--sampler-mode",
-                    choices=("device", "host", "disaggregated", "baseline"),
+                    choices=("device", "host", "disaggregated", "baseline",
+                             "adaptive"),
                     default=None,
-                    help="decision-plane placement (DESIGN.md §13): "
+                    help="decision-plane placement (DESIGN.md §13/§15): "
                          "'device' samples on the accelerator, 'host' "
                          "disaggregates to the CPU sampler pool, committed "
-                         "one step (pipeline: one re-entry) behind. "
+                         "one step (pipeline: one re-entry) behind; "
+                         "'adaptive' lets the DecisionPlaneController "
+                         "switch placement and resize the pool online. "
                          "Default: device for the single-stage engine, "
                          "host for --stages>1. 'disaggregated'/'baseline' "
                          "are the historic pipeline spellings")

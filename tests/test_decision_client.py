@@ -216,3 +216,100 @@ def test_engine_rejects_unknown_sampler_mode(model):
     with pytest.raises(ValueError, match="sampler_mode"):
         Engine(cfg, params,
                EngineConfig(sampler_mode="sidecar", **_ENGINE_KW))
+
+
+# -- ISSUE 7: online mode switching (the §15 controller's primary knob) ----
+
+def test_set_mode_drains_before_reroute(model):
+    """``set_mode`` must join every outstanding ticket before re-routing
+    (join-before-re-route, §15) and report whether anything changed."""
+    cfg, params = model
+    eng = Engine(cfg, params, EngineConfig(sampler_mode="host",
+                                           **_ENGINE_KW))
+    eng.submit(_reqs(cfg, n=2))
+    eng.step()                       # dispatch: a ticket is now in flight
+    assert eng.client._tickets, "host step left no outstanding ticket"
+    assert eng.client.set_mode("host") is False      # no-op keeps tickets
+    assert eng.client.set_mode("device") is True
+    assert eng.client._tickets == [], "switch left tickets outstanding"
+    assert eng.client.mode == "device"
+    assert eng.client.set_mode("disaggregated") is True   # legacy spelling
+    assert eng.client.is_host
+    eng.run(max_steps=2000)
+    eng.close()
+
+
+def test_resize_pool_recycles_executor(model):
+    """Online pool resize (§15): the executor is recycled at the new
+    width, outstanding work still resolves, and the row-local sharding
+    keeps streams untouched (test_worker_count_invariance pins that)."""
+    cfg, params = model
+    eng = Engine(cfg, params, EngineConfig(sampler_mode="host", samplers=2,
+                                           **_ENGINE_KW))
+    eng.submit(_reqs(cfg, n=3))
+    eng.step()
+    assert eng.client.pool._ex is not None
+    eng.client.resize_pool(4)
+    assert eng.client.pool.num_workers == 4
+    assert eng.client.pool._ex is None, "resize must recycle the executor"
+    eng.client.resize_pool(4)        # same width: nothing to recycle
+    done = eng.run(max_steps=2000)
+    assert len(done) == 3
+    eng.close()
+
+
+def _run_switching(cfg, params, reqs, every=3, **kw):
+    """Drive the engine while toggling device <-> host every ``every``
+    committed steps — the §15 controller's switch pattern, exercised
+    deterministically."""
+    ekw = dict(_ENGINE_KW)
+    ekw.update(kw)
+    eng = Engine(cfg, params, EngineConfig(**ekw))
+    eng.submit(reqs)
+    steps = 0
+    while eng.scheduler.has_work or eng.in_flight:
+        eng.step()
+        steps += 1
+        assert steps < 4000, "switching run did not finish"
+        if steps % every == 0:
+            eng.set_sampler_mode(
+                "host" if eng.client.mode == "device" else "device")
+    eng.flush()
+    done = eng.scheduler.finished
+    assert len(done) == len(reqs), f"{len(done)}/{len(reqs)} finished"
+    out = {r.request_id: r.output for r in done}
+    eng.close()
+    return out
+
+
+@pytest.mark.adaptive
+@pytest.mark.parametrize("overlap", [True, False])
+@pytest.mark.parametrize("cache", [
+    "contiguous", pytest.param("paged", marks=paged)])
+def test_mid_generation_switch_bit_identical(model, reference, overlap,
+                                             cache):
+    """ISSUE 7 differential bar: ``set_mode()`` firing mid-generation —
+    every 3 committed steps, both directions — must leave the committed
+    streams bit-identical to static device mode across {overlap, seq} ×
+    {contiguous, paged}."""
+    cfg, params = model
+    got = _run_switching(cfg, params, _reqs(cfg), overlap=overlap,
+                         cache=cache)
+    assert got == reference
+
+
+@pytest.mark.adaptive
+def test_mid_generation_switch_seeded_and_greedy(model):
+    """Seeded and greedy per-request contracts (§11) survive mid-run
+    placement switches unchanged."""
+    cfg, params = model
+    base = _reqs(cfg, n=6, seed=3)
+    mk = lambda skw: [Request(r.request_id, list(r.prompt),
+                              r.max_new_tokens,
+                              SamplingConfig(temperature=0.9, top_k=30,
+                                             **skw))
+                      for r in base]
+    for skw in ({"seed": 100}, {"greedy": True}):
+        ref, _ = _run(cfg, params, reqs=mk(skw))
+        got = _run_switching(cfg, params, mk(skw), every=2)
+        assert got == ref, skw

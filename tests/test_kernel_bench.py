@@ -74,8 +74,13 @@ def test_kernel_bench_smoke_emits_schema(tmp_path):
     doc = json.loads(out.read_text())
     assert doc["bench"] == "kernel_bench"
     point = doc["trajectory"][-1]
-    assert point["schema"] == 1
+    assert point["schema"] == 2
     assert point["timing"]["fused_wall_us"] > 0
+    # per-mode trend columns: each side labels its execution substrate so
+    # no future reader repeats the PR-6 cross-mode comparison
+    assert point["timing"]["fused_exec_mode"] in ("pallas_interpret",
+                                                  "pallas_compiled")
+    assert point["timing"]["unfused_exec_mode"] == "xla"
     assert {r["config"] for r in point["results"]} == names
 
     # the trajectory appends — a second run must not clobber the first
