@@ -167,6 +167,7 @@ class HostSamplerPool:
         self.backend_override = backend_override
         self.num_workers = max(1, num_workers)
         self._ex: Optional[ThreadPoolExecutor] = None
+        self._closed = False
         self.refresh()
 
     def _decision_plane(self) -> DecisionPlane:
@@ -236,6 +237,11 @@ class HostSamplerPool:
         workers block on it, not the caller). ``nonces``/``pos``/``active``
         are host snapshots taken at the microbatch's stage-1 dispatch.
         """
+        if self._closed:
+            # the executor is created lazily, so without this guard a
+            # submit after close() would silently restart worker threads
+            # the owner believes are gone (fleet double-shutdown paths)
+            raise RuntimeError("HostSamplerPool is closed")
         if self._ex is None:
             self._ex = ThreadPoolExecutor(
                 max_workers=self.num_workers,
@@ -277,6 +283,9 @@ class HostSamplerPool:
         self.num_workers = n
 
     def close(self) -> None:
+        """Idempotent: joins in-flight shards on the first call; later
+        calls (double-close from fleet shutdown paths) are no-ops."""
+        self._closed = True
         if self._ex is not None:
             self._ex.shutdown(wait=True)
             self._ex = None

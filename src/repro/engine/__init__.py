@@ -4,7 +4,7 @@ from repro.engine.decision_client import (DecisionPlaneClient,  # noqa: F401
                                           SAMPLER_MODES,
                                           canonical_sampler_mode)
 from repro.engine.engine import (Engine, EngineConfig,  # noqa: F401
-                                 GenerationEvent, SlotParams,
-                                 generate_stream)
+                                 GenerationEvent, SlotParams, StreamCursor,
+                                 generate_stream, locked_api)
 from repro.engine.pipeline import (MicrobatchPlanner,  # noqa: F401
                                    PipelineConfig, PipelineEngine)

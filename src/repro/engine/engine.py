@@ -65,9 +65,10 @@ multimodal frontends are exercised by the dry-run and smoke tests.
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -126,6 +127,25 @@ def _bucket(n: int, mult: int) -> int:
     return max(mult, ((n + mult - 1) // mult) * mult)
 
 
+def locked_api(fn):
+    """Serialize a public engine method on the instance's ``_api_lock``.
+
+    Both engines were written for a single consumer; the gateway's replica
+    fleet (and any client running several ``generate_stream`` iterators
+    from different threads) submits and steps concurrently. The lock is
+    reentrant so locked methods may nest (``step`` → ``flush`` on paged
+    preemption, ``close`` → ``flush``), and it only serializes the
+    host-side orchestration — the device work those calls dispatch stays
+    async underneath."""
+    import functools
+
+    @functools.wraps(fn)
+    def wrapper(self, *args, **kwargs):
+        with self._api_lock:
+            return fn(self, *args, **kwargs)
+    return wrapper
+
+
 @dataclass(frozen=True)
 class GenerationEvent:
     """One streamed output item from :meth:`Engine.generate`.
@@ -143,41 +163,70 @@ class GenerationEvent:
     finish_reason: Optional[str] = None
 
 
+class StreamCursor:
+    """Incremental view of one request's committed tokens as
+    :class:`GenerationEvent` items.
+
+    The cursor owns the emitted/closed bookkeeping that used to live as
+    closure state inside :func:`generate_stream`; factoring it out lets
+    every consumer of the engine protocol — ``generate_stream`` here, the
+    gateway's replica workers (``repro.gateway.fleet``) — share one
+    definition of "which committed tokens have been delivered", so the
+    wire stream cannot drift from the in-process stream by construction.
+    """
+
+    def __init__(self, request: Request):
+        self.request = request
+        self.emitted = 0
+        self.closed = False
+
+    def drain(self) -> Iterator[GenerationEvent]:
+        """Yield every committed-but-undelivered token (the final one
+        carrying ``finish_reason``); a request that finished without a
+        fresh token (e.g. truncated at KV capacity) yields a terminal
+        ``token=None`` marker event."""
+        r = self.request
+        if self.closed:
+            return
+        while self.emitted < len(r.output):
+            tok = r.output[self.emitted]
+            self.emitted += 1
+            fin = r.finish_reason if self.emitted == len(r.output) else None
+            if fin is not None:
+                self.closed = True
+            yield GenerationEvent(r.request_id, tok, fin)
+        if not self.closed and r.finish_reason is not None:
+            self.closed = True
+            yield GenerationEvent(r.request_id, None, r.finish_reason)
+
+
 def generate_stream(eng, requests: List[Request], max_steps: int = 10_000):
     """Shared client surface behind :meth:`Engine.generate` and
     :meth:`PipelineEngine.generate` (DESIGN.md §11/§12): submit
     ``requests``, drive ``eng.step()`` and yield :class:`GenerationEvent`
     items as tokens **commit** on the host. ``eng`` needs only the narrow
     engine protocol — ``submit`` / ``step`` / ``flush`` / ``in_flight`` /
-    ``scheduler.has_work``."""
+    ``scheduler.has_work``.
+
+    Concurrency: the engine's public methods are serialized on an internal
+    lock, so several ``generate_stream`` iterators may drive ONE engine
+    from different threads — each drains only its own requests, and the
+    (request, position) RNG keying keeps every stream bit-identical to a
+    serial run regardless of how admissions interleave
+    (``tests/test_engine_concurrency.py``)."""
     requests = list(requests)
     if not requests:
         return
     eng.submit(requests)
-    emitted = [0] * len(requests)
-    closed = [False] * len(requests)
+    cursors = [StreamCursor(r) for r in requests]
 
     def drain():
-        for i, r in enumerate(requests):
-            if closed[i]:
-                continue
-            while emitted[i] < len(r.output):
-                tok = r.output[emitted[i]]
-                emitted[i] += 1
-                fin = r.finish_reason \
-                    if emitted[i] == len(r.output) else None
-                if fin is not None:
-                    closed[i] = True
-                yield GenerationEvent(r.request_id, tok, fin)
-            if not closed[i] and r.finish_reason is not None:
-                # finished without a fresh token (e.g. truncated at KV
-                # capacity): terminal marker event, token=None
-                closed[i] = True
-                yield GenerationEvent(r.request_id, None, r.finish_reason)
+        for c in cursors:
+            yield from c.drain()
 
     steps = 0
     try:
-        while not all(closed) and steps < max_steps and \
+        while not all(c.closed for c in cursors) and steps < max_steps and \
                 (eng.scheduler.has_work or eng.in_flight):
             eng.step()
             steps += 1
@@ -191,11 +240,10 @@ def generate_stream(eng, requests: List[Request], max_steps: int = 10_000):
         raise
     eng.flush()
     yield from drain()
-    if not all(closed):
+    if not all(c.closed for c in cursors):
         # never end the stream silently mid-request: a client must be
         # able to distinguish completion from the step cap
-        open_ids = [r.request_id for i, r in enumerate(requests)
-                    if not closed[i]]
+        open_ids = [c.request.request_id for c in cursors if not c.closed]
         raise RuntimeError(
             f"generate() hit max_steps={max_steps} with requests still "
             f"unfinished: {open_ids}")
@@ -292,6 +340,13 @@ class Engine:
 
     def __init__(self, model_cfg: ModelConfig, params, engine_cfg: EngineConfig,
                  hot_set=None, hot_counts=None, autotune: bool = False):
+        # first, before anything can raise: the public-API lock (the engine
+        # was written for one consumer; the gateway's fleet bridge and
+        # concurrent generate_stream iterators serialize on it) and the
+        # closed flag (close() must be safe on a half-constructed engine —
+        # fleet shutdown paths double-close and close after failed startup)
+        self._api_lock = threading.RLock()
+        self._closed = False
         self.cfg = model_cfg
         self.ecfg = engine_cfg
         self.model = Model(model_cfg)
@@ -579,7 +634,10 @@ class Engine:
                 return active
 
     # -- public API --------------------------------------------------------------
+    @locked_api
     def submit(self, requests: List[Request]) -> None:
+        if self._closed:
+            raise RuntimeError("Engine is closed")
         if self._paged:
             # validate the whole batch before enqueueing any of it: the
             # admission gate would skip an oversized request on every round
@@ -600,6 +658,7 @@ class Engine:
         """Dispatched-but-uncommitted iterations (0 or 1 in overlap mode)."""
         return len(self._pending)
 
+    @locked_api
     def step(self) -> dict:
         """One engine iteration. Returns observability stats (in overlapped
         mode: the stats of the iteration committed this call, i.e. lagged by
@@ -680,6 +739,7 @@ class Engine:
             rec = self._drain_one() or rec
         return rec
 
+    @locked_api
     def flush(self) -> None:
         """Commit every in-flight iteration and retire what finished."""
         while self._pending:
@@ -716,9 +776,28 @@ class Engine:
     def close(self) -> None:
         """Shut down the decision-plane client's sampler pool (host-mode
         worker threads), mirroring :meth:`PipelineEngine.close`. In-flight
-        iterations are committed first so no ticket is stranded."""
-        self.flush()
-        self.client.close()
+        iterations are committed first so no ticket is stranded.
+
+        Idempotent, and safe on a partially constructed engine (a failed
+        ``__init__`` leaves attributes missing): fleet shutdown paths
+        double-close replicas, and the second close must be a no-op — it
+        must never flush into an already-shut sampler pool."""
+        if getattr(self, "_closed", False):
+            return
+        lock = getattr(self, "_api_lock", None)
+        if lock is None:           # __init__ died before the first stmt
+            self._closed = True
+            return
+        with lock:
+            if self._closed:
+                return
+            self._closed = True
+            if getattr(self, "scheduler", None) is not None and \
+                    getattr(self, "_pending", None) is not None:
+                self.flush()
+            client = getattr(self, "client", None)
+            if client is not None:
+                client.close()
 
     # -- commit ----------------------------------------------------------------
     def _resolve_host_pending(self) -> None:

@@ -48,6 +48,7 @@ never lose blocks.
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
@@ -62,7 +63,8 @@ from repro.core.decision_plane import DecisionPlane
 from repro.core.host_sampler import PoolResult, SampleTicket
 from repro.engine.decision_client import DecisionPlaneClient
 from repro.engine.engine import (EngineConfig, SlotParams, _insert_rows,
-                                 generate_stream, prefill_new_rows)
+                                 generate_stream, locked_api,
+                                 prefill_new_rows)
 from repro.engine.paged_cache import (BlockAllocator, PagedCacheConfig,
                                       init_paged_cache)
 from repro.engine.request import Request, RequestState
@@ -215,6 +217,11 @@ class PipelineEngine:
 
     def __init__(self, model_cfg: ModelConfig, params,
                  engine_cfg: PipelineConfig, hot_set=None):
+        # first, before anything can raise: see Engine.__init__ — the
+        # public-API lock for concurrent consumers (the gateway fleet)
+        # and the closed flag for idempotent/half-constructed close()
+        self._api_lock = threading.RLock()
+        self._closed = False
         self.cfg = model_cfg
         self.ecfg = engine_cfg
         p = engine_cfg.stages
@@ -365,7 +372,10 @@ class PipelineEngine:
             self._slot_len[slot] = 0
 
     # -- public API ----------------------------------------------------------
+    @locked_api
     def submit(self, requests: List[Request]) -> None:
+        if self._closed:
+            raise RuntimeError("PipelineEngine is closed")
         if self._paged:
             for r in requests:
                 if self._blocks_for(r) > self.pcfg.num_blocks:
@@ -383,6 +393,7 @@ class PipelineEngine:
                    if mb.x is not None or mb.ticket is not None
                    or mb.ready is not None)
 
+    @locked_api
     def step(self) -> dict:
         """Advance the pipeline by ONE cycle: every stage serves its
         scheduled microbatch, the re-entering microbatch commits its
@@ -405,6 +416,7 @@ class PipelineEngine:
         self.planner.tick()
         return rec
 
+    @locked_api
     def flush(self) -> None:
         """Drain every in-flight microbatch (no new admissions) and retire
         what finished."""
@@ -437,9 +449,25 @@ class PipelineEngine:
         """Commit every in-flight microbatch, then shut down the
         decision-plane client's sampler pool — the same contract as
         :meth:`Engine.close`, so sampled-but-uncommitted tokens are never
-        silently dropped."""
-        self.flush()
-        self.client.close()
+        silently dropped. Idempotent and safe after a failed startup
+        (missing attributes are skipped), matching :meth:`Engine.close`:
+        fleet shutdown paths double-close replicas."""
+        if getattr(self, "_closed", False):
+            return
+        lock = getattr(self, "_api_lock", None)
+        if lock is None:
+            self._closed = True
+            return
+        with lock:
+            if self._closed:
+                return
+            self._closed = True
+            if getattr(self, "scheduler", None) is not None and \
+                    getattr(self, "_mb", None) is not None:
+                self.flush()
+            client = getattr(self, "client", None)
+            if client is not None:
+                client.close()
 
     # -- cycle internals ----------------------------------------------------
     def _reenter(self, i: int) -> Optional[dict]:

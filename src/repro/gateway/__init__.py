@@ -1,0 +1,35 @@
+"""Async serving gateway: HTTP/SSE front-end over a replica fleet
+(DESIGN.md §16).
+
+The engines speak integer tokens through in-process Python calls; this
+package is the path from "a user on the network" to ``Engine.generate``:
+
+* :mod:`repro.gateway.codec`  — the text⇄token seam (`Codec` protocol, a
+  byte-level reference codec, and a worker pool that keeps tokenize /
+  detokenize off the engine and event-loop threads);
+* :mod:`repro.gateway.fleet`  — ``ReplicaFleet``: N engines, each on its
+  own worker thread behind a single-owner submission queue, streaming
+  committed tokens to per-request sinks;
+* :mod:`repro.gateway.router` — least-loaded dispatch with session
+  affinity and bounded-queue admission (429 + Retry-After, never
+  unbounded buffering);
+* :mod:`repro.gateway.http`   — the stdlib-asyncio HTTP server: an
+  OpenAI-style ``/v1/completions`` endpoint with SSE streaming, health
+  and stats endpoints, graceful drain;
+* :mod:`repro.gateway.client` — a minimal stdlib HTTP/SSE client used by
+  the benchmarks, tests, and the CI smoke job;
+* :mod:`repro.gateway.stats`  — per-request wire-level traces
+  (arrival → admission → first event → finish) and the
+  goodput-under-SLO metric (DistServe).
+
+No dependencies beyond the standard library and the repo itself.
+"""
+from repro.gateway.client import (StreamResult,  # noqa: F401
+                                  request_json, stream_completion)
+from repro.gateway.codec import (ByteCodec, Codec, CodecPool,  # noqa: F401
+                                 get_codec, registered_codecs)
+from repro.gateway.fleet import Replica, ReplicaFleet  # noqa: F401
+from repro.gateway.http import GatewayServer  # noqa: F401
+from repro.gateway.router import Router, RouteResult  # noqa: F401
+from repro.gateway.stats import (WireTrace, goodput_under_slo,  # noqa: F401
+                                 summarize_traces)

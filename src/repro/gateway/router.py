@@ -1,0 +1,114 @@
+"""Request router: least-loaded dispatch, session affinity, admission
+backpressure (DESIGN.md §16).
+
+The router is the gateway's single admission decision point. Policy:
+
+* **session affinity** — a request carrying a ``session_id`` sticks to
+  the replica its session first landed on (KV reuse / conversational
+  locality is per-replica state in every real deployment). Affinity is
+  deliberately *strict*: if the sticky replica is full the request is
+  refused (429) rather than silently migrated — a migrated follow-up
+  would lose whatever the affinity existed for, and the client's retry
+  lands back on the sticky replica once it drains.
+* **least-loaded** — otherwise, replicas are tried in ascending open-load
+  order (ties by index, deterministic). ``try_submit`` re-checks capacity
+  atomically, so a race between two connections can refuse, never
+  over-admit.
+* **backpressure** — if no replica admits, the router answers ``busy``
+  with a Retry-After hint instead of queueing: the gateway holds no
+  unbounded buffer, the bound lives in the per-replica capacity.
+
+The affinity table is bounded (LRU by insertion refresh) so a session
+flood cannot grow gateway memory without bound.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import List, Optional
+
+from repro.gateway.fleet import Replica
+
+
+@dataclass
+class RouteResult:
+    """Outcome of one admission attempt.
+
+    ``status``: ``ok`` (admitted to ``replica``), ``busy`` (every
+    eligible replica at capacity → HTTP 429 + ``retry_after``), or
+    ``draining`` (gateway is shutting down → HTTP 503).
+    """
+
+    status: str
+    replica: Optional[Replica] = None
+    retry_after: float = 1.0
+
+
+class Router:
+    def __init__(self, replicas: List[Replica], retry_after: float = 1.0,
+                 max_sessions: int = 4096):
+        assert replicas
+        self.replicas = list(replicas)
+        self.retry_after = retry_after
+        self.max_sessions = max_sessions
+        self._affinity: "OrderedDict[str, int]" = OrderedDict()
+        self._lock = threading.Lock()
+        self._accepting = True
+        self.rejected_busy = 0
+        self.rejected_draining = 0
+
+    @property
+    def accepting(self) -> bool:
+        return self._accepting
+
+    def stop_accepting(self) -> None:
+        """Drain mode: every subsequent submit answers ``draining``."""
+        self._accepting = False
+
+    def _sticky(self, session_id: str) -> Optional[Replica]:
+        with self._lock:
+            idx = self._affinity.get(session_id)
+            if idx is not None:
+                self._affinity.move_to_end(session_id)
+                return self.replicas[idx]
+        return None
+
+    def _pin(self, session_id: str, replica: Replica) -> None:
+        idx = self.replicas.index(replica)
+        with self._lock:
+            self._affinity[session_id] = idx
+            self._affinity.move_to_end(session_id)
+            while len(self._affinity) > self.max_sessions:
+                self._affinity.popitem(last=False)
+
+    def submit(self, request, sink, on_done=None,
+               session_id: Optional[str] = None) -> RouteResult:
+        """Route and admit in one step (the capacity check must be atomic
+        with admission, so the router never *selects* without
+        submitting)."""
+        if not self._accepting:
+            self.rejected_draining += 1
+            return RouteResult("draining", retry_after=self.retry_after)
+        if session_id is not None:
+            sticky = self._sticky(session_id)
+            if sticky is not None:
+                if sticky.try_submit(request, sink, on_done):
+                    return RouteResult("ok", sticky)
+                self.rejected_busy += 1
+                return RouteResult("busy", retry_after=self.retry_after)
+        # least-loaded first; the load read is a snapshot, try_submit
+        # re-checks capacity atomically
+        order = sorted(range(len(self.replicas)),
+                       key=lambda i: (self.replicas[i].load, i))
+        for i in order:
+            r = self.replicas[i]
+            if r.try_submit(request, sink, on_done):
+                if session_id is not None:
+                    self._pin(session_id, r)
+                return RouteResult("ok", r)
+        self.rejected_busy += 1
+        return RouteResult("busy", retry_after=self.retry_after)
+
+
+__all__ = ["Router", "RouteResult"]

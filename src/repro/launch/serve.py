@@ -35,6 +35,24 @@ Per-request sampling contract (DESIGN.md §11):
                                 N+i; streams are pure functions of the seed)
     --greedy                    argmax decoding for every request
     --stop 5,9 [--stop 7]       token-level stop sequences (repeatable)
+
+Gateway mode (DESIGN.md §16) serves over HTTP/SSE instead of running a
+synthetic batch — every engine flag above still shapes the replicas:
+
+    PYTHONPATH=src python -m repro.launch.serve --gateway --replicas 2 \
+        --arch smollm-360m --reduced
+    curl -N localhost:8100/v1/completions -d \
+        '{"prompt": "the quick brown fox", "max_tokens": 16, "seed": 7,
+          "stream": true}'
+
+    --gateway                   serve an OpenAI-style completions endpoint
+                                over a replica fleet (Ctrl-C drains)
+    --replicas N                engine replicas (identical params: every
+                                replica is built from the same model seed)
+    --http-host / --http-port   bind address (default 127.0.0.1:8100)
+    --capacity N                per-replica open-request bound; beyond it
+                                admissions answer 429 + Retry-After
+    --codec NAME                registered text codec (default 'byte')
 """
 from __future__ import annotations
 
@@ -109,6 +127,49 @@ def synth_requests(n: int, vocab: int, max_new: int, rng_seed: int = 0,
     return reqs
 
 
+def build_fleet(args):
+    """N identically-parameterized replicas (same model seed → the same
+    weights, so seeded streams match across replicas) wrapped in a
+    :class:`~repro.gateway.fleet.ReplicaFleet`."""
+    from repro.gateway import ReplicaFleet
+    engines = [
+        build_engine(args.arch, args.reduced, args.algorithm, args.batch,
+                     args.max_seq, overlap=args.overlap,
+                     prompt_chunk=args.prompt_chunk, cache=args.cache,
+                     block_size=args.block_size, num_blocks=args.num_blocks,
+                     stages=args.stages, microbatches=args.microbatches,
+                     samplers=args.samplers, sampler_mode=args.sampler_mode,
+                     pool_algorithm=args.pool_algorithm)
+        for _ in range(args.replicas)]
+    return ReplicaFleet(engines, capacity=args.capacity)
+
+
+def run_gateway(args) -> None:
+    """Boot the §16 gateway and serve until SIGINT/SIGTERM, then drain:
+    stop admissions, let in-flight streams finish, close every replica."""
+    import asyncio
+    import signal
+
+    from repro.gateway import GatewayServer
+
+    async def _serve() -> None:
+        gw = GatewayServer(build_fleet(args), codec=args.codec)
+        await gw.serve(args.http_host, args.http_port)
+        stop = asyncio.Event()
+        loop = asyncio.get_running_loop()
+        for sig in (signal.SIGINT, signal.SIGTERM):
+            loop.add_signal_handler(sig, stop.set)
+        print(f"gateway listening on http://{gw.host}:{gw.port} "
+              f"({args.replicas} replica(s), capacity {args.capacity}, "
+              f"codec '{args.codec}') — Ctrl-C drains and exits")
+        await stop.wait()
+        print("draining gateway ...")
+        await gw.shutdown()
+        print("gateway closed")
+
+    asyncio.run(_serve())
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=list(ARCH_IDS), default="smollm-360m")
@@ -172,7 +233,22 @@ def main() -> None:
                     metavar="IDS",
                     help="token-level stop sequence as comma-separated ids; "
                          "repeatable (finish_reason becomes 'stop')")
+    ap.add_argument("--gateway", action="store_true",
+                    help="serve HTTP/SSE completions over a replica fleet "
+                         "(DESIGN.md §16) instead of a synthetic batch")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="gateway engine replicas (identical parameters)")
+    ap.add_argument("--http-host", default="127.0.0.1")
+    ap.add_argument("--http-port", type=int, default=8100)
+    ap.add_argument("--capacity", type=int, default=16,
+                    help="per-replica open-request bound (429 beyond it)")
+    ap.add_argument("--codec", default="byte",
+                    help="registered text codec for the gateway")
     args = ap.parse_args()
+
+    if args.gateway:
+        run_gateway(args)
+        return
 
     stop_sequences = tuple(
         tuple(int(t) for t in s.split(",") if t.strip()) for s in args.stop)

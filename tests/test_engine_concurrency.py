@@ -1,0 +1,147 @@
+"""Concurrent-client safety and lifecycle contracts of the engines.
+
+The gateway's replica fleet (DESIGN.md §16) relies on two engine-level
+guarantees this file pins down:
+
+* **concurrency** — the public engine methods are serialized on an
+  internal lock, so several ``generate_stream`` iterators may drive ONE
+  engine from different threads, and (request, position) RNG keying
+  makes every stream bit-identical to a serial run no matter how the
+  drivers interleave;
+* **lifecycle** — ``close()`` is idempotent (fleet shutdown paths
+  double-close) and safe on a partially constructed engine (a failed
+  ``__init__`` must not make cleanup raise), and ``submit()`` after
+  close fails loudly instead of feeding a dead pool.
+"""
+import threading
+
+import jax
+import pytest
+
+from repro.config import ModelConfig, SamplingConfig, SHVSConfig
+from repro.engine import (Engine, EngineConfig, PipelineConfig,
+                          PipelineEngine, Request)
+from repro.models.model import Model
+
+VOCAB = 512
+
+_CACHE: dict = {}
+
+
+def _cfg() -> ModelConfig:
+    return ModelConfig(name="conc-test", family="dense", num_layers=2,
+                       d_model=32, num_heads=2, num_kv_heads=2, d_ff=64,
+                       vocab_size=VOCAB)
+
+
+def _params(cfg):
+    if "params" not in _CACHE:
+        _CACHE["params"] = Model(cfg).init(jax.random.PRNGKey(0))
+    return _CACHE["params"]
+
+
+def _engine() -> Engine:
+    cfg = _cfg()
+    return Engine(cfg, _params(cfg), EngineConfig(
+        max_batch=4, max_seq_len=96, algorithm="reference",
+        shvs=SHVSConfig(hot_size=VOCAB // 4), k_cap=256, overlap=True))
+
+
+def _group(base_id: int, n: int = 2, max_new: int = 8):
+    """Seeded requests: streams are pure functions of (seed, prompt,
+    params), so the same group is comparable across engines and
+    interleavings."""
+    return [Request(
+        request_id=base_id + i,
+        prompt=[(7 * (base_id + i) + 3 * j) % (VOCAB - 1) + 1
+                for j in range(5 + (base_id + i) % 4)],
+        max_new_tokens=max_new,
+        sampling=SamplingConfig(temperature=0.9, top_k=40, top_p=0.95,
+                                seed=4000 + base_id + i))
+        for i in range(n)]
+
+
+def _collect(eng, reqs, out: dict) -> None:
+    for ev in eng.generate(reqs):
+        if ev.token is not None:
+            out.setdefault(ev.request_id, []).append(ev.token)
+
+
+def test_interleaved_concurrent_streams_match_serial():
+    """Three threads each drive generate_stream on one shared engine;
+    every per-request token stream must be bit-identical to running the
+    same groups serially on a fresh engine."""
+    groups = [_group(10), _group(20), _group(30)]
+
+    serial: dict = {}
+    eng = _engine()
+    try:
+        for g in groups:
+            _collect(eng, g, serial)
+    finally:
+        eng.close()
+
+    concurrent: dict = {}
+    errors: list = []
+    eng = _engine()
+    try:
+        def drive(g):
+            try:
+                _collect(eng, g, concurrent)
+            except BaseException as e:        # surfaced after join
+                errors.append(e)
+
+        # fresh Request objects: the serial run consumed the originals
+        regroups = [_group(10), _group(20), _group(30)]
+        threads = [threading.Thread(target=drive, args=(g,))
+                   for g in regroups]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=120)
+        assert not any(t.is_alive() for t in threads), \
+            "concurrent generate_stream deadlocked"
+    finally:
+        eng.close()
+    assert not errors, f"concurrent driver raised: {errors!r}"
+    assert concurrent == serial, (
+        "interleaved concurrent streams diverged from the serial run")
+
+
+def test_engine_close_idempotent():
+    eng = _engine()
+    eng.close()
+    eng.close()                                    # second close: no-op
+    with pytest.raises(RuntimeError, match="closed"):
+        eng.submit(_group(50, n=1))
+
+
+def test_engine_close_after_failed_startup():
+    """close() on a partially constructed engine (as a failed __init__
+    leaves it) must be a quiet no-op — fleet shutdown sweeps every
+    replica, including ones that never finished booting."""
+    eng = Engine.__new__(Engine)
+    eng.close()
+    eng.close()
+
+
+def test_pipeline_close_after_failed_startup():
+    eng = PipelineEngine.__new__(PipelineEngine)
+    eng.close()
+    eng.close()
+
+
+@pytest.mark.pipeline
+def test_pipeline_close_idempotent():
+    cfg = _cfg()
+    eng = PipelineEngine(cfg, _params(cfg), PipelineConfig(
+        stages=2, max_batch=4, max_seq_len=96, algorithm="reference",
+        shvs=SHVSConfig(hot_size=VOCAB // 4), k_cap=256,
+        sampler_mode="host", samplers=2))
+    reqs = _group(70, n=2, max_new=4)
+    for _ in eng.generate(reqs):
+        pass
+    eng.close()
+    eng.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        eng.submit(_group(80, n=1))

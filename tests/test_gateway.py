@@ -1,0 +1,399 @@
+"""Gateway tests (DESIGN.md §16): router policy, backpressure, drain,
+codec, goodput math, and end-to-end wire identity over live HTTP/SSE.
+
+Marked ``gateway`` and excluded from tier-1 (they boot real engines and
+sockets); CI runs them in their own step.
+"""
+import asyncio
+
+import jax
+import pytest
+
+from repro.config import SamplingConfig, SHVSConfig
+from repro.engine import PipelineConfig, PipelineEngine, Request
+from repro.gateway import (ByteCodec, CodecPool, GatewayServer,
+                           ReplicaFleet, Router, WireTrace, get_codec,
+                           goodput_under_slo)
+from repro.gateway.client import request_json, stream_completion
+from repro.gateway.smoke import PROMPTS, VOCAB, smoke_model
+from repro.models.model import Model
+
+pytestmark = pytest.mark.gateway
+
+_CACHE: dict = {}
+
+
+def _params():
+    if "params" not in _CACHE:
+        _CACHE["params"] = Model(smoke_model()).init(jax.random.PRNGKey(0))
+    return _CACHE["params"]
+
+
+def _single_engine():
+    # same construction as smoke_engine, but with the shared params so
+    # the test file pays model init once
+    from repro.engine import Engine, EngineConfig
+    return Engine(smoke_model(), _params(), EngineConfig(
+        max_batch=4, max_seq_len=96, algorithm="reference",
+        shvs=SHVSConfig(hot_size=VOCAB // 4), k_cap=256,
+        overlap=True, sampler_mode="device"))
+
+
+def _pipeline_engine():
+    return PipelineEngine(smoke_model(), _params(), PipelineConfig(
+        stages=2, max_batch=4, max_seq_len=96, algorithm="reference",
+        shvs=SHVSConfig(hot_size=VOCAB // 4), k_cap=256,
+        sampler_mode="host", samplers=2))
+
+
+_FACTORIES = {"single": _single_engine, "pipeline": _pipeline_engine}
+
+
+# -- codec -------------------------------------------------------------------
+
+def test_byte_codec_roundtrip():
+    codec = ByteCodec()
+    for text in ("hello world", "naïve café ☕", ""):
+        toks = codec.encode(text)
+        assert all(1 <= t <= 256 for t in toks)
+        assert codec.decode(toks) == text
+    assert codec.vocab_limit == 257
+    assert isinstance(get_codec("byte"), ByteCodec)
+
+
+def test_byte_codec_out_of_range_ids_are_replaced():
+    codec = ByteCodec()
+    # byte+1 mapping: "h" is token ord("h") + 1
+    toks = [300] + [ord(c) + 1 for c in "hi"]
+    assert codec.decode(toks) == "�hi"
+
+
+def test_codec_pool_async():
+    pool = CodecPool(ByteCodec(), workers=2)
+
+    async def roundtrip():
+        loop = asyncio.get_running_loop()
+        toks = await pool.encode_async(loop, "quartz")
+        return await pool.decode_async(loop, toks)
+
+    try:
+        assert asyncio.run(roundtrip()) == "quartz"
+    finally:
+        pool.close()
+
+
+# -- goodput math ------------------------------------------------------------
+
+def _trace(ttft_s, tpot_s, n_tokens=4, finished=True):
+    tr = WireTrace(request_id=0, arrival=100.0)
+    tr.first_event = 100.0 + ttft_s
+    tr.n_tokens = n_tokens
+    tr.token_times = [tr.first_event + i * tpot_s for i in range(n_tokens)]
+    tr.finish = tr.token_times[-1] if finished else None
+    return tr
+
+
+def test_goodput_under_slo_counts_only_requests_meeting_both_targets():
+    traces = [_trace(0.050, 0.010),          # meets both
+              _trace(0.500, 0.010),          # TTFT blown
+              _trace(0.050, 0.200),          # TPOT blown
+              _trace(0.050, 0.010, finished=False)]   # never finished
+    g = goodput_under_slo(traces, slo_ttft_ms=250, slo_tpot_ms=100,
+                          window_s=2.0)
+    assert g["requests_met"] == 1
+    assert g["requests_total"] == 4
+    assert g["attainment"] == pytest.approx(0.25)
+    assert g["goodput_rps"] == pytest.approx(0.5)
+
+
+def test_goodput_single_token_requests_judged_on_ttft_alone():
+    tr = _trace(0.050, 0.0, n_tokens=1)
+    g = goodput_under_slo([tr], slo_ttft_ms=250, slo_tpot_ms=1e-9,
+                          window_s=1.0)
+    assert g["requests_met"] == 1
+
+
+# -- router policy (fake replicas: pure policy, no engines) ------------------
+
+class FakeReplica:
+    def __init__(self, name, capacity=2, load=0):
+        self.name = name
+        self.capacity = capacity
+        self.load = load
+        self.admitted = []
+
+    def try_submit(self, request, sink, on_done=None):
+        if self.load >= self.capacity:
+            return False
+        self.load += 1
+        self.admitted.append(request)
+        return True
+
+
+def test_router_least_loaded_choice():
+    reps = [FakeReplica("a", load=2, capacity=9),
+            FakeReplica("b", load=0, capacity=9),
+            FakeReplica("c", load=1, capacity=9)]
+    res = Router(reps).submit("req", sink=None)
+    assert res.status == "ok" and res.replica is reps[1]
+
+
+def test_router_tie_breaks_by_index():
+    reps = [FakeReplica("a"), FakeReplica("b")]
+    res = Router(reps).submit("req", sink=None)
+    assert res.replica is reps[0]
+
+
+def test_router_affinity_stickiness():
+    reps = [FakeReplica("a", capacity=9), FakeReplica("b", capacity=9)]
+    router = Router(reps)
+    # pin session s1 to replica b by loading a first
+    reps[0].load = 5
+    assert router.submit("r1", None, session_id="s1").replica is reps[1]
+    # a is now the least-loaded choice, but s1 must stay on b
+    reps[0].load = 0
+    for _ in range(3):
+        assert router.submit("rn", None, session_id="s1").replica is reps[1]
+    # a fresh session takes the least-loaded replica as usual
+    assert router.submit("r2", None, session_id="s2").replica is reps[0]
+
+
+def test_router_strict_affinity_refuses_instead_of_migrating():
+    reps = [FakeReplica("a", capacity=9), FakeReplica("b", capacity=1)]
+    router = Router(reps)
+    reps[0].load = 5
+    assert router.submit("r1", None, session_id="s1").replica is reps[1]
+    reps[0].load = 0                    # plenty of room elsewhere...
+    res = router.submit("r2", None, session_id="s1")   # ...but b is full
+    assert res.status == "busy" and res.replica is None
+    assert router.rejected_busy == 1
+    assert not reps[0].admitted         # never silently migrated
+
+
+def test_router_busy_when_every_replica_full():
+    reps = [FakeReplica("a", capacity=1, load=1),
+            FakeReplica("b", capacity=1, load=1)]
+    router = Router(reps, retry_after=2.5)
+    res = router.submit("req", None)
+    assert res.status == "busy" and res.retry_after == 2.5
+    assert router.rejected_busy == 1
+
+
+def test_router_draining_after_stop_accepting():
+    router = Router([FakeReplica("a")])
+    router.stop_accepting()
+    assert router.submit("req", None).status == "draining"
+    assert router.rejected_draining == 1
+
+
+def test_router_affinity_table_is_bounded():
+    reps = [FakeReplica("a", capacity=10_000)]
+    router = Router(reps, max_sessions=4)
+    for i in range(10):
+        router.submit(f"r{i}", None, session_id=f"s{i}")
+    assert len(router._affinity) <= 4
+
+
+# -- end-to-end over live HTTP/SSE -------------------------------------------
+
+def _payload(i: int, prompt: str, max_new: int = 8) -> dict:
+    return {"prompt": prompt, "max_tokens": max_new, "temperature": 0.9,
+            "top_k": 40, "top_p": 0.95, "repetition_penalty": 1.1,
+            "seed": 7000 + i}
+
+
+def _reference(factory, max_new: int = 8) -> dict:
+    """In-process ground truth on a fresh engine of the same kind."""
+    codec = ByteCodec()
+    eng = factory()
+    try:
+        reqs = [Request(request_id=900 + i, prompt=codec.encode(p),
+                        max_new_tokens=max_new,
+                        sampling=SamplingConfig(
+                            temperature=0.9, top_k=40, top_p=0.95,
+                            repetition_penalty=1.1, seed=7000 + i))
+                for i, p in enumerate(PROMPTS)]
+        streams = {r.request_id: [] for r in reqs}
+        for ev in eng.generate(reqs):
+            if ev.token is not None:
+                streams[ev.request_id].append(ev.token)
+        return {p: streams[900 + i] for i, p in enumerate(PROMPTS)}
+    finally:
+        eng.close()
+
+
+@pytest.mark.parametrize("replicas", (1, 2))
+@pytest.mark.parametrize("kind", ("single", "pipeline"))
+def test_wire_identity_over_http(kind, replicas):
+    """The acceptance gate: seeded streams over live HTTP/SSE — 1 and 2
+    replicas, single-stage and pipeline engines — bit-identical to
+    in-process generation on the same engine kind."""
+    factory = _FACTORIES[kind]
+    ref = _reference(factory)
+    fleet = ReplicaFleet([factory() for _ in range(replicas)], capacity=4)
+
+    async def drive():
+        gw = GatewayServer(fleet)
+        await gw.serve(port=0)
+        try:
+            return await asyncio.gather(*[
+                stream_completion(gw.host, gw.port,
+                                  {**_payload(i, p),
+                                   "session_id": f"s{i}"})
+                for i, p in enumerate(PROMPTS)])
+        finally:
+            await gw.shutdown()
+
+    results = asyncio.run(drive())
+    for (p, res) in zip(PROMPTS, results):
+        assert res.status == 200 and res.error is None
+        assert res.tokens == ref[p], (
+            f"wire stream for {p!r} over {kind}/{replicas}r diverged "
+            "from in-process generation")
+        assert res.finish_reason == "length"
+    # every replica engine was closed by the drain
+    for r in fleet.replicas:
+        assert r.engine._closed
+
+
+def test_http_backpressure_429_and_drain_503():
+    """Capacity-full admissions answer 429 + Retry-After without
+    disturbing the in-flight stream; shutdown answers 503 to new
+    requests while draining the open stream to completion."""
+    fleet = ReplicaFleet([_single_engine()], capacity=1)
+
+    async def drive():
+        gw = GatewayServer(fleet, retry_after=2.0)
+        await gw.serve(port=0)
+        long_task = asyncio.create_task(stream_completion(
+            gw.host, gw.port, _payload(0, "occupy the only slot",
+                                       max_new=48)))
+        # wait until the long request holds the replica's single slot
+        for _ in range(200):
+            if fleet.replicas[0].load >= 1:
+                break
+            await asyncio.sleep(0.005)
+        assert fleet.replicas[0].load == 1
+
+        rejected = await stream_completion(
+            gw.host, gw.port, _payload(1, "should bounce"))
+        assert rejected.status == 429
+        assert rejected.headers.get("retry-after") == "2"
+        assert rejected.error is not None
+
+        # begin draining while the long stream is still open
+        shut = asyncio.create_task(gw.shutdown())
+        for _ in range(200):
+            if not gw.router.accepting:
+                break
+            await asyncio.sleep(0.005)
+        status, body = await request_json(
+            gw.host, gw.port, "/v1/completions",
+            _payload(2, "too late"))
+        assert status == 503 and "drain" in body["error"]
+
+        long_res = await long_task
+        await shut
+        return long_res
+
+    long_res = asyncio.run(drive())
+    # the in-flight stream survived both the 429 and the drain, intact
+    assert long_res.status == 200 and long_res.error is None
+    assert long_res.finish_reason == "length"
+    assert len(long_res.tokens) == 48
+
+
+def test_http_session_affinity_sticks_across_requests():
+    fleet = ReplicaFleet([_single_engine(), _single_engine()], capacity=4)
+
+    async def drive():
+        gw = GatewayServer(fleet)
+        await gw.serve(port=0)
+        try:
+            # pin session A while replica0 is busy -> A lands on replica1
+            hold = asyncio.create_task(stream_completion(
+                gw.host, gw.port, _payload(0, "hold replica zero",
+                                           max_new=48)))
+            for _ in range(200):
+                if fleet.replicas[0].load >= 1:
+                    break
+                await asyncio.sleep(0.005)
+            sticky = []
+            st, body = await request_json(
+                gw.host, gw.port, "/v1/completions",
+                {**_payload(1, "session opener"), "session_id": "A"})
+            assert st == 200
+            sticky.append(body["stats"]["replica"])
+            await hold
+            # replica0 is idle again (the tie-break favourite), but the
+            # session must stay where it was pinned
+            for i in range(2, 5):
+                st, body = await request_json(
+                    gw.host, gw.port, "/v1/completions",
+                    {**_payload(i, "session follow-up"),
+                     "session_id": "A"})
+                assert st == 200
+                sticky.append(body["stats"]["replica"])
+            return sticky
+        finally:
+            await gw.shutdown()
+
+    sticky = asyncio.run(drive())
+    assert sticky == ["replica1"] * 4, sticky
+
+
+def test_http_bad_requests_rejected():
+    fleet = ReplicaFleet([_single_engine()], capacity=2)
+
+    async def drive():
+        gw = GatewayServer(fleet)
+        await gw.serve(port=0)
+        try:
+            cases = [
+                {},                                       # missing prompt
+                {"prompt": 5},                            # wrong type
+                {"prompt": "x", "max_tokens": 0},         # out of range
+                {"prompt": "x", "max_tokens": 10 ** 6},   # over the cap
+                {"prompt": "x", "seed": "nope"},          # bad seed
+            ]
+            statuses = []
+            for c in cases:
+                st, body = await request_json(
+                    gw.host, gw.port, "/v1/completions", c)
+                statuses.append((st, "error" in body))
+            st404, _ = await request_json(gw.host, gw.port, "/nope", {})
+            healthy, health = await request_json(
+                gw.host, gw.port, "/healthz")
+            return statuses, st404, healthy, health
+        finally:
+            await gw.shutdown()
+
+    statuses, st404, healthy, health = asyncio.run(drive())
+    assert statuses == [(400, True)] * 5
+    assert st404 == 404
+    assert healthy == 200 and health["status"] == "ok"
+    assert health["replicas"] == {"replica0": 0}
+
+
+def test_wire_stats_reported_per_request():
+    fleet = ReplicaFleet([_single_engine()], capacity=2)
+
+    async def drive():
+        gw = GatewayServer(fleet)
+        await gw.serve(port=0)
+        try:
+            res = await stream_completion(
+                gw.host, gw.port, _payload(0, "measure me", max_new=6))
+            _, stats = await request_json(gw.host, gw.port, "/v1/stats")
+            return res, stats
+        finally:
+            await gw.shutdown()
+
+    res, stats = asyncio.run(drive())
+    assert res.status == 200
+    st = res.server_stats
+    assert st is not None and st["n_tokens"] == 6
+    assert st["ttft_ms"] > 0 and st["tpot_ms"] > 0
+    assert st["queue_ms"] is not None and st["queue_ms"] >= 0
+    assert stats["served"] == 1
+    assert stats["wire"]["n"] == 1 and stats["wire"]["finished"] == 1
