@@ -328,8 +328,8 @@ def measure_bimodal(mode: str, n_per_phase: int, phases: int, lo: float,
                                           seed, n_lo=n_lo)
     reqs = _requests(cfg, len(arrivals), max_new, seed=seed)
     makespan = open_loop(eng, reqs, arrivals)
-    switches = [{"step": r["step"], "to": r["sampler_mode"]}
-                for r in eng.stats_log if "sampler_mode" in r]
+    switches = [{"step": r.step, "to": r.sampler_mode}
+                for r in eng.stats_log if r.sampler_mode is not None]
     eng.scheduler.finished.clear()
     eng.stats_log.clear()
     assert all(r.done for r in reqs), "bimodal run left requests open"

@@ -275,6 +275,13 @@ class DecisionPlaneController:
             return act
         return None
 
+    def observe_record(self, rec) -> Optional[ControllerAction]:
+        """Feed one typed :class:`~repro.obs.records.StepRecord` — the
+        §17 telemetry plane's single validated stream. Equivalent to
+        ``observe(**rec.controller_streams())``: unset record fields
+        arrive as NaN and are dropped per stream."""
+        return self.observe(**rec.controller_streams())
+
     def _decide_placement(self, act: ControllerAction) -> None:
         if self._step - self._last_switch < self.dwell:
             return

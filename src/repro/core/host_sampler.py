@@ -40,6 +40,7 @@ import numpy as np
 
 from repro.core import penalties as pen
 from repro.core.decision_plane import DecisionPlane
+from repro.obs.tracer import NULL_TRACER, StepTracer
 
 
 class PoolResult(NamedTuple):
@@ -162,10 +163,15 @@ class HostSamplerPool:
     """
 
     def __init__(self, plane: DecisionPlane, num_workers: int = 2,
-                 backend_override: Optional[str] = None):
+                 backend_override: Optional[str] = None,
+                 tracer: Optional[StepTracer] = None):
         self.plane = plane
         self.backend_override = backend_override
         self.num_workers = max(1, num_workers)
+        # the owning engine's flight recorder (§17): workers record their
+        # d2h_transfer / host_sample spans on their own thread tracks —
+        # the Eq. 4 overlap with the engine's next forward, made visible
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self._ex: Optional[ThreadPoolExecutor] = None
         self._closed = False
         self.refresh()
@@ -222,10 +228,18 @@ class HostSamplerPool:
         toks = np.asarray(tokens)        # worker-side host sync
         stats_host = (float(stats.accept_rate), float(stats.alpha_mean),
                       float(stats.fallback_rate))
+        t2 = time.perf_counter()
+        if self.tracer.enabled:
+            # same stamps as the returned decomposition: the trace and the
+            # stats stream can never disagree about where the time went
+            self.tracer.add("d2h_transfer", t0, t1,
+                            name=f"fetch[{lo}:{hi}]", step=int(step))
+            self.tracer.add("host_sample", t1, t2,
+                            name=f"sample[{lo}:{hi}]", step=int(step))
         return _ShardResult(tokens=toks, state=new_state, stats=stats_host,
                             active_rows=int(np.count_nonzero(active[lo:hi])),
                             transfer_time=t1 - t0,
-                            sampler_time=time.perf_counter() - t1)
+                            sampler_time=t2 - t1)
 
     # -- client surface ------------------------------------------------------
     def submit(self, logits, state: pen.PenaltyState, params, bias,

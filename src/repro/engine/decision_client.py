@@ -33,6 +33,7 @@ import numpy as np
 
 from repro.core.decision_plane import DecisionPlane
 from repro.core.host_sampler import HostSamplerPool, PoolResult, SampleTicket
+from repro.obs.tracer import StepTracer
 
 #: accepted ``sampler_mode`` spellings -> canonical client mode. The
 #: pipeline's original names stay valid so existing configs don't break.
@@ -71,11 +72,15 @@ class DecisionPlaneClient:
     """
 
     def __init__(self, plane: DecisionPlane, mode: str = "device",
-                 workers: int = 2, pool_algorithm: Optional[str] = None):
+                 workers: int = 2, pool_algorithm: Optional[str] = None,
+                 tracer: Optional[StepTracer] = None):
         self.mode = canonical_sampler_mode(mode)
         self.plane = plane
+        # the engine's flight recorder rides through to the pool workers
+        # (§17) so their fetch/sample spans land in the same trace
         self.pool = HostSamplerPool(plane, workers,
-                                    backend_override=pool_algorithm)
+                                    backend_override=pool_algorithm,
+                                    tracer=tracer)
         self._tickets: List[SampleTicket] = []   # outstanding host work
 
     @property

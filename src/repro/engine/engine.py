@@ -67,8 +67,9 @@ from __future__ import annotations
 
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, Iterator, List, Optional, Tuple
+from typing import Deque, Dict, Iterator, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -87,6 +88,7 @@ from repro.engine.request import Request, RequestState
 from repro.engine.scheduler import ChunkTask, Scheduler
 from repro.models.attention import flat_block_indices, scatter_block_kv
 from repro.models.model import Model
+from repro.obs import EngineMetrics, StepRecord, Telemetry
 
 
 @dataclass
@@ -121,6 +123,9 @@ class EngineConfig:
     #                                  registered backend (e.g. "fused")
     #                                  while the engine plane keeps
     #                                  ``algorithm`` (DESIGN.md §14)
+    stats_window: int = 4096         # stats_log / cycle_log ring size: a
+    #                                  long-lived gateway replica keeps the
+    #                                  most recent window, never grows (§17)
 
 
 def _bucket(n: int, mult: int) -> int:
@@ -329,6 +334,7 @@ class _Pending:
     ticket: Optional[SampleTicket] = None       # host mode: pending shards
     res: Optional[PoolResult] = None            # host mode: resolved result
     stall: float = 0.0                          # host mode: block on ticket
+    t_dispatch: float = 0.0                     # perf_counter at dispatch (§17)
 
 
 class Engine:
@@ -339,7 +345,8 @@ class Engine:
     rebuilds the hot set (re-jitting the decode program) when H* moves."""
 
     def __init__(self, model_cfg: ModelConfig, params, engine_cfg: EngineConfig,
-                 hot_set=None, hot_counts=None, autotune: bool = False):
+                 hot_set=None, hot_counts=None, autotune: bool = False,
+                 telemetry: Optional[Telemetry] = None):
         # first, before anything can raise: the public-API lock (the engine
         # was written for one consumer; the gateway's fleet bridge and
         # concurrent generate_stream iterators serialize on it) and the
@@ -410,11 +417,20 @@ class Engine:
         # light load, where there is no sampling work to overlap — and
         # lets the controller disaggregate online under queue pressure
         self._adaptive = engine_cfg.sampler_mode == "adaptive"
+        # telemetry plane (§17): a flight-recorder tracer (off by default)
+        # plus the metrics registry; the tracer rides into the client so
+        # pool workers record their fetch/sample spans on the same clock
+        self.obs = telemetry if telemetry is not None else Telemetry()
+        self.tracer = self.obs.tracer
+        self._metrics = EngineMetrics(self.obs.metrics)
         self.client = DecisionPlaneClient(
             self.decision,
             "device" if self._adaptive else engine_cfg.sampler_mode,
-            engine_cfg.samplers, pool_algorithm=engine_cfg.pool_algorithm)
+            engine_cfg.samplers, pool_algorithm=engine_cfg.pool_algorithm,
+            tracer=self.tracer)
         self._host = self.client.is_host
+        self._metrics.mode_host.set(1.0 if self._host else 0.0)
+        self._metrics.pool_workers.set(float(engine_cfg.samplers))
         self.cache = (init_paged_cache(model_cfg, B, self.pcfg)
                       if self._paged else self.model.init_cache(B, S))
         self.pstate = self.decision.init_state(B)
@@ -427,7 +443,10 @@ class Engine:
         self._pending: List[_Pending] = []
         self._jit_programs()
         self._prefill_cache: Dict[int, callable] = {}
-        self.stats_log: List[dict] = []
+        # bounded flight log of typed StepRecords (§17) — a long-lived
+        # replica keeps the most recent window instead of growing forever
+        self.stats_log: Deque[StepRecord] = deque(
+            maxlen=engine_cfg.stats_window)
         self._hot_counts = hot_counts
         self._controller = None
         hot = None
@@ -703,6 +722,7 @@ class Engine:
                 # the logits FUTURE to the sampler pool — the workers, not
                 # this thread, block on the in-flight device compute; the
                 # engine keeps running the next step's host-side work
+                t_disp = time.perf_counter()
                 logits, self.cache = self._forward_jit(
                     self.params, self.cache, self.last_tokens, active)
                 ticket = self.client.submit(
@@ -712,11 +732,13 @@ class Engine:
                 self._pending.append(_Pending(
                     kind="host", ticket=ticket, step=plan.step,
                     active=plan.active_slots.copy(),
-                    slot_request=list(plan.slot_request)))
+                    slot_request=list(plan.slot_request),
+                    t_dispatch=t_disp))
             else:
                 # .copy(): jnp.asarray can alias host numpy buffers
                 # zero-copy on CPU, and the async in-flight program must
                 # not observe the engine mutating _nonce/_pos after dispatch
+                t_disp = time.perf_counter()
                 tokens, self.cache, self.pstate, stats = self._decode_jit(
                     self.params, self.cache, self.pstate, self.last_tokens,
                     sparams, self._sp.bias_array(),
@@ -727,17 +749,18 @@ class Engine:
                 self._pending.append(_Pending(
                     kind="decode", tokens=tokens, step=plan.step, stats=stats,
                     active=plan.active_slots.copy(),
-                    slot_request=list(plan.slot_request)))
+                    slot_request=list(plan.slot_request),
+                    t_dispatch=t_disp))
             self._pos += plan.active_slots
             if self._paged:
                 self._slot_len += plan.active_slots
         # drain: sequential mode syncs everything now; overlapped mode keeps
         # exactly one decode in flight so the device never waits on the host
         keep = 1 if (self.ecfg.overlap and dispatched) else 0
-        rec: dict = {}
+        rec: Optional[StepRecord] = None
         while len(self._pending) > keep:
             rec = self._drain_one() or rec
-        return rec
+        return rec if rec is not None else {}
 
     @locked_api
     def flush(self) -> None:
@@ -810,11 +833,16 @@ class Engine:
             if ent.kind == "host" and ent.res is None:
                 t0 = time.perf_counter()
                 ent.res = ent.ticket.result()
-                ent.stall = time.perf_counter() - t0
+                t1 = time.perf_counter()
+                ent.stall = t1 - t0
+                if self.tracer.enabled:
+                    self.tracer.add("pool_stall", t0, t1,
+                                    name=f"stall@step{ent.step}",
+                                    step=ent.step)
                 self.last_tokens = jnp.asarray(ent.res.tokens)
                 self.pstate = ent.res.state
 
-    def _drain_one(self) -> Optional[dict]:
+    def _drain_one(self) -> Optional[StepRecord]:
         """Fetch the oldest pending result to the host and commit it. This
         is the only place engine iterations block on the device (device
         mode) or the sampler pool (host mode, if not already resolved)."""
@@ -823,58 +851,77 @@ class Engine:
             if ent.res is None:       # sequential mode drains immediately
                 t0 = time.perf_counter()
                 ent.res = ent.ticket.result()
-                ent.stall = time.perf_counter() - t0
+                t1 = time.perf_counter()
+                ent.stall = t1 - t0
+                if self.tracer.enabled:
+                    self.tracer.add("pool_stall", t0, t1,
+                                    name=f"stall@step{ent.step}",
+                                    step=ent.step)
                 self.last_tokens = jnp.asarray(ent.res.tokens)
                 self.pstate = ent.res.state
             toks_np = ent.res.tokens
         else:
             toks_np = np.asarray(ent.tokens)      # host sync point
         now = time.perf_counter()
+        if ent.kind == "decode" and self.tracer.enabled:
+            # dispatch -> host materialization of the fused decode program
+            self.tracer.add("forward", ent.t_dispatch, now,
+                            name=f"decode@step{ent.step}", step=ent.step)
         if ent.kind == "first":
             for slot, req in ent.finishers:
                 req.record_token(int(toks_np[slot]), now)
             return None
         self.scheduler.commit(toks_np, ent.slot_request, ent.active, now=now)
-        rec = {"step": ent.step, "batch": int(ent.active.sum())}
+        if self.tracer.enabled:
+            self.tracer.add("commit", now, time.perf_counter(),
+                            name=f"commit@step{ent.step}", step=ent.step)
+        # queue state is stamped on EVERY record (§17): the controller,
+        # /metrics, and the benchmarks consume one validated stream
+        common = dict(step=ent.step, batch=int(ent.active.sum()),
+                      queue_depth=float(len(self.scheduler.waiting)),
+                      queue_delay_ms=self._queue_delay_ms())
         if ent.kind == "host":
-            rec.update(accept_rate=ent.res.accept_rate,
-                       alpha_mean=ent.res.alpha_mean,
-                       fallback_rate=ent.res.fallback_rate,
-                       stall_ms=ent.stall * 1e3,
-                       sampler_ms=ent.res.sampler_time * 1e3,
-                       transfer_ms=ent.res.transfer_time * 1e3)
+            rec = StepRecord(accept_rate=ent.res.accept_rate,
+                             alpha_mean=ent.res.alpha_mean,
+                             fallback_rate=ent.res.fallback_rate,
+                             stall_ms=ent.stall * 1e3,
+                             sampler_ms=ent.res.sampler_time * 1e3,
+                             transfer_ms=ent.res.transfer_time * 1e3,
+                             **common)
         else:
-            rec.update(accept_rate=float(ent.stats.accept_rate),
-                       alpha_mean=float(ent.stats.alpha_mean),
-                       fallback_rate=float(ent.stats.fallback_rate))
+            rec = StepRecord(accept_rate=float(ent.stats.accept_rate),
+                             alpha_mean=float(ent.stats.alpha_mean),
+                             fallback_rate=float(ent.stats.fallback_rate),
+                             **common)
         if self._controller is not None:
-            new_h = self._controller.observe(rec["alpha_mean"])
+            new_h = self._controller.observe(rec.alpha_mean)
             if new_h:
                 self._apply_hot_size(new_h)
-                rec["hot_size"] = new_h
+                rec.hot_size = new_h
         if self._dpc is not None:
-            nan = float("nan")
-            act = self._dpc.observe(
-                queue_depth=float(len(self.scheduler.waiting)),
-                queue_delay_ms=self._queue_delay_ms(),
-                batch=float(rec["batch"]),
-                stall_ms=rec.get("stall_ms", nan),
-                sampler_ms=rec.get("sampler_ms", nan),
-                transfer_ms=rec.get("transfer_ms", nan),
-                alpha_mean=rec["alpha_mean"])
+            act = self._dpc.observe_record(rec)
             if act:
                 if act.hot_size is not None:
                     self._apply_hot_size(act.hot_size)
-                    rec["hot_size"] = act.hot_size
+                    rec.hot_size = act.hot_size
                 if act.samplers is not None:
                     # resolving first keeps the drained ticket's result
                     # installed before the executor recycle
                     self._resolve_host_pending()
                     self.client.resize_pool(act.samplers)
-                    rec["samplers"] = act.samplers
+                    rec.samplers = act.samplers
+                    self._metrics.pool_workers.set(float(act.samplers))
                 if act.sampler_mode is not None:
                     self.set_sampler_mode(act.sampler_mode)
-                    rec["sampler_mode"] = act.sampler_mode
+                    rec.sampler_mode = act.sampler_mode
+                self._metrics.decisions.inc()
+                if self.tracer.enabled:
+                    self.tracer.instant(
+                        "decision", name=f"decision@step{ent.step}",
+                        step=ent.step, hot_size=act.hot_size,
+                        samplers=act.samplers,
+                        sampler_mode=act.sampler_mode)
+        self._metrics.observe_step(rec)
         self.stats_log.append(rec)
         return rec
 
@@ -892,6 +939,7 @@ class Engine:
         self._resolve_host_pending()
         self.client.set_mode(mode)
         self._host = self.client.is_host
+        self._metrics.mode_host.set(1.0 if self._host else 0.0)
         return True
 
     def _apply_hot_size(self, new_h: int) -> None:
@@ -929,6 +977,15 @@ class Engine:
         §9) re-prefills prompt+output and samples its next token at output
         position len(output) — the (request, position) RNG keying makes the
         continuation bit-identical to the unpreempted stream."""
+        t_pf = time.perf_counter()
+        if self.tracer.enabled:
+            # arrival -> admission wait per request (0-stamped offline
+            # traces carry no arrival clock; skip those)
+            for r in new_requests:
+                if r.arrival_time:
+                    self.tracer.add("queue_wait", r.arrival_time, t_pf,
+                                    name=f"wait#{r.request_id}",
+                                    request_id=int(r.request_id))
         first, rows_cache, rows_pstate, lens, bases, rids = \
             prefill_new_rows(self, new_requests, self.scheduler.step)
         slots = jnp.asarray([r.slot for r in new_requests], jnp.int32)
@@ -947,6 +1004,10 @@ class Engine:
         self.last_tokens = self.last_tokens.at[slots].set(first)
         now = time.perf_counter()
         first_np = np.asarray(first)   # blocks on the prefill program only
+        if self.tracer.enabled:
+            self.tracer.add("prefill", t_pf, time.perf_counter(),
+                            name=f"prefill x{len(new_requests)}",
+                            rows=len(new_requests))
         for i, r in enumerate(new_requests):
             self._sp.set_row(r.slot, r.sampling)
             self._nonce[r.slot] = rids[i]
@@ -991,6 +1052,13 @@ class Engine:
         """Claim slots for chunked-prefill requests: reset the rows' cache
         offsets and seed their penalty state with the full-prompt histogram
         (available up front — Eq. 5 is position-independent)."""
+        if self.tracer.enabled:
+            now = time.perf_counter()
+            for r in new_chunked:
+                if r.arrival_time:
+                    self.tracer.add("queue_wait", r.arrival_time, now,
+                                    name=f"wait#{r.request_id}",
+                                    request_id=int(r.request_id))
         P = len(new_chunked)
         V = self.cfg.vocab_size
         windows = [r.prompt[r.prompt_offset:] for r in new_chunked]

@@ -50,8 +50,9 @@ from __future__ import annotations
 
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -73,6 +74,7 @@ from repro.models.attention import flat_block_indices, scatter_block_kv
 from repro.models.model import Model
 from repro.models.transformer import (slice_stage_cache, slice_stage_params,
                                       stage_bounds)
+from repro.obs import (CycleRecord, EngineMetrics, StepRecord, Telemetry)
 
 
 @dataclass
@@ -216,7 +218,8 @@ class PipelineEngine:
     """
 
     def __init__(self, model_cfg: ModelConfig, params,
-                 engine_cfg: PipelineConfig, hot_set=None):
+                 engine_cfg: PipelineConfig, hot_set=None,
+                 telemetry: Optional[Telemetry] = None):
         # first, before anything can raise: see Engine.__init__ — the
         # public-API lock for concurrent consumers (the gateway fleet)
         # and the closed flag for idempotent/half-constructed close()
@@ -262,11 +265,19 @@ class PipelineEngine:
         # (Eq. 4: synchronous sampling caps the cycle) — and lets the
         # controller fall back to device / resize the pool online
         self._adaptive = engine_cfg.sampler_mode == "adaptive"
+        # telemetry plane (§17): shared tracer/metrics wiring with Engine —
+        # the tracer rides into the pool workers via the client
+        self.obs = telemetry if telemetry is not None else Telemetry()
+        self.tracer = self.obs.tracer
+        self._metrics = EngineMetrics(self.obs.metrics)
         self.client = DecisionPlaneClient(
             self.decision,
             "host" if self._adaptive else engine_cfg.sampler_mode,
-            engine_cfg.samplers, pool_algorithm=engine_cfg.pool_algorithm)
+            engine_cfg.samplers, pool_algorithm=engine_cfg.pool_algorithm,
+            tracer=self.tracer)
         self.pool = self.client.pool
+        self._metrics.mode_host.set(1.0 if self.client.is_host else 0.0)
+        self._metrics.pool_workers.set(float(engine_cfg.samplers))
         self.planner = MicrobatchPlanner(p, M, self.R)
         S = engine_cfg.max_seq_len
         self._paged = engine_cfg.cache == "paged"
@@ -317,9 +328,13 @@ class PipelineEngine:
                             for s in range(p)]
         self._prefill_cache: Dict[Tuple, callable] = {}
         self._draining = False
-        self.stats_log: List[dict] = []
-        self.cycle_log: List[dict] = []
-        self._cycle_rec: Optional[dict] = None
+        # bounded typed flight logs (§17): StepRecord per commit,
+        # CycleRecord per cycle — a long-lived replica keeps a window
+        self.stats_log: Deque[StepRecord] = deque(
+            maxlen=engine_cfg.stats_window)
+        self.cycle_log: Deque[CycleRecord] = deque(
+            maxlen=engine_cfg.stats_window)
+        self._cycle_rec: Optional[CycleRecord] = None
         self._dpc = None
         if self._adaptive:
             from repro.core.autotune import DecisionPlaneController
@@ -400,10 +415,8 @@ class PipelineEngine:
         pending token and dispatches the next. Returns the commit's
         observability stats (empty dict when no commit landed)."""
         c = self.planner.cycle
-        self._cycle_rec = {"cycle": c, "busy": [None] * self.p,
-                           "stall": 0.0, "sample": 0.0, "sampler": None,
-                           "transfer": None}
-        rec: dict = {}
+        self._cycle_rec = CycleRecord(cycle=c, busy=[None] * self.p)
+        rec = {}
         for s in range(self.p - 1, -1, -1):
             i = self.planner.stage_for(c, s)
             mb = self._mb[i]
@@ -552,10 +565,17 @@ class PipelineEngine:
             self.stage_params[s], inputs, self._stage_cache(s, i),
             jnp.asarray(active))
         out.block_until_ready()          # honest per-stage busy time
-        busy = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        busy = t1 - t0
         self._store_stage_cache(s, i, dict(cache))
         if self._cycle_rec is not None:
-            self._cycle_rec["busy"][s] = busy
+            self._cycle_rec.busy[s] = busy
+        if self.tracer.enabled:
+            # one timeline row per stage: overlap between stage rows and
+            # the pool workers' host_sample rows is the paper's Eq. 4 win
+            self.tracer.add("stage", t0, t1, name=f"s{s}/mb{i}",
+                            track=f"stage{s}", microbatch=i, stage=s,
+                            cycle=self.planner.cycle)
         if s == self.p - 1:
             mb.x = None
             mb.stage_next = 0
@@ -577,15 +597,22 @@ class PipelineEngine:
         if not self.client.is_host:
             t0 = time.perf_counter()
             mb.ready = self.client.sample_sync(*args)
-            dt = time.perf_counter() - t0
+            t1 = time.perf_counter()
+            dt = t1 - t0
             if self._cycle_rec is not None:
-                self._cycle_rec["sample"] = dt
-                if self._cycle_rec["busy"][self.p - 1] is not None:
-                    self._cycle_rec["busy"][self.p - 1] += dt
+                self._cycle_rec.sample = dt
+                if self._cycle_rec.busy[self.p - 1] is not None:
+                    self._cycle_rec.busy[self.p - 1] += dt
+            if self.tracer.enabled:
+                # Eq. 4 baseline: the draw sits ON the last stage's row,
+                # right where it blocks the cycle
+                self.tracer.add("host_sample", t0, t1,
+                                name=f"sync-sample/mb{i}",
+                                track=f"stage{self.p - 1}", microbatch=i)
         else:
             mb.ticket = self.client.submit(*args)
 
-    def _commit(self, i: int) -> dict:
+    def _commit(self, i: int) -> StepRecord:
         """Commit microbatch ``i``'s sampled token at its re-entry cycle;
         the block on the ticket is the measured sampler-pool stall."""
         mb = self._mb[i]
@@ -596,35 +623,39 @@ class PipelineEngine:
         else:
             t0 = time.perf_counter()
             res = mb.ticket.result()
-            stall = time.perf_counter() - t0
+            t1 = time.perf_counter()
+            stall = t1 - t0
             mb.ticket = None
+            if self.tracer.enabled:
+                self.tracer.add("pool_stall", t0, t1,
+                                name=f"stall/mb{i}", microbatch=i,
+                                cycle=self.planner.cycle)
         if self._cycle_rec is not None:
-            self._cycle_rec["stall"] = stall
-            self._cycle_rec["sampler"] = res.sampler_time
-            self._cycle_rec["transfer"] = res.transfer_time
+            self._cycle_rec.stall = stall
+            self._cycle_rec.sampler = res.sampler_time
+            self._cycle_rec.transfer = res.transfer_time
         now = time.perf_counter()
         self.scheduler.commit(res.tokens, rec.slot_request, rec.active,
                               now=now)
+        if self.tracer.enabled:
+            self.tracer.add("commit", now, time.perf_counter(),
+                            name=f"commit/mb{i}", microbatch=i,
+                            cycle=self.planner.cycle)
         self.pstate[i] = res.state
         self.last_tokens[i] = np.where(rec.active, res.tokens, 0).astype(
             np.int32)
-        out = {"step": rec.dispatch_cycle, "batch": int(rec.active.sum()),
-               "accept_rate": res.accept_rate,
-               "alpha_mean": res.alpha_mean,
-               "fallback_rate": res.fallback_rate,
-               "stall_ms": stall * 1e3,
-               "sampler_ms": res.sampler_time * 1e3,
-               "transfer_ms": res.transfer_time * 1e3}
+        out = StepRecord(
+            step=rec.dispatch_cycle, batch=int(rec.active.sum()),
+            accept_rate=res.accept_rate, alpha_mean=res.alpha_mean,
+            fallback_rate=res.fallback_rate, stall_ms=stall * 1e3,
+            sampler_ms=res.sampler_time * 1e3,
+            transfer_ms=res.transfer_time * 1e3,
+            queue_depth=float(len(self.scheduler.waiting)),
+            queue_delay_ms=self._queue_delay_ms(),
+            bubble_frac=self._last_bubble())
         self.stats_log.append(out)
         if self._dpc is not None:
-            act = self._dpc.observe(
-                queue_depth=float(len(self.scheduler.waiting)),
-                queue_delay_ms=self._queue_delay_ms(),
-                batch=float(out["batch"]),
-                stall_ms=out["stall_ms"], sampler_ms=out["sampler_ms"],
-                transfer_ms=out["transfer_ms"],
-                bubble_frac=self._last_bubble(),
-                alpha_mean=out["alpha_mean"])
+            act = self._dpc.observe_record(out)
             if act:
                 # the client drains outstanding tickets before re-routing /
                 # recycling the executor; per-microbatch tickets already
@@ -632,10 +663,21 @@ class PipelineEngine:
                 # microbatch still commits under its dispatch placement
                 if act.samplers is not None:
                     self.client.resize_pool(act.samplers)
-                    out["samplers"] = act.samplers
+                    out.samplers = act.samplers
+                    self._metrics.pool_workers.set(float(act.samplers))
                 if act.sampler_mode is not None:
                     self.client.set_mode(act.sampler_mode)
-                    out["sampler_mode"] = act.sampler_mode
+                    out.sampler_mode = act.sampler_mode
+                    self._metrics.mode_host.set(
+                        1.0 if self.client.is_host else 0.0)
+                self._metrics.decisions.inc()
+                if self.tracer.enabled:
+                    self.tracer.instant(
+                        "decision", name=f"decision/mb{i}",
+                        cycle=self.planner.cycle, hot_size=act.hot_size,
+                        samplers=act.samplers,
+                        sampler_mode=act.sampler_mode)
+        self._metrics.observe_step(out)
         return out
 
     def _queue_delay_ms(self) -> float:
@@ -651,11 +693,15 @@ class PipelineEngine:
 
     def _last_bubble(self) -> float:
         """Bubble fraction of the most recent FULL cycle (every stage
-        timed), Eq. 4's ``Σ_s (C − busy_s) / (p·C)``; NaN during fill."""
-        for r in reversed(self.cycle_log[-2 * self.M:]):
-            if all(b is not None for b in r["busy"]):
-                busy = np.asarray(r["busy"], float)
-                busy[0] += r["stall"]
+        timed), Eq. 4's ``Σ_s (C − busy_s) / (p·C)``; NaN during fill.
+        Walks the deque newest-first (no slicing — cycle_log is a bounded
+        ring) and gives up after 2·M cycles, matching the old window."""
+        for n, r in enumerate(reversed(self.cycle_log)):
+            if n >= 2 * self.M:
+                break
+            if r.full:
+                busy = np.asarray(r.busy, float)
+                busy[0] += r.stall
                 C = float(busy.max())
                 if C > 0:
                     return float((C - busy).sum() / (self.p * C))
@@ -679,6 +725,14 @@ class PipelineEngine:
         with :meth:`Engine._admit` (``engine.prefill_new_rows``), so the
         engines' bit-identity cannot drift; only the install targets one
         slot group here."""
+        t_pf = time.perf_counter()
+        if self.tracer.enabled:
+            for r in new_requests:
+                if r.arrival_time:
+                    self.tracer.add("queue_wait", r.arrival_time, t_pf,
+                                    name=f"wait#{r.request_id}",
+                                    request_id=int(r.request_id),
+                                    microbatch=i)
         first, rows_cache, rows_pstate, lens, bases, rids = \
             prefill_new_rows(self, new_requests, self.planner.cycle)
         base_slot = i * self.R
@@ -702,6 +756,10 @@ class PipelineEngine:
                 rows_pstate.output_counts))
         now = time.perf_counter()
         first_np = np.asarray(first)
+        if self.tracer.enabled:
+            self.tracer.add("prefill", t_pf, time.perf_counter(),
+                            name=f"prefill x{len(new_requests)}/mb{i}",
+                            rows=len(new_requests), microbatch=i)
         for k, r in enumerate(new_requests):
             local = int(locals_[k])
             self._sp[i].set_row(local, r.sampling)
@@ -752,8 +810,7 @@ class PipelineEngine:
         ``Σ_s (C − busy_s) / (p·C)``. Only *full* cycles — every stage
         served a microbatch — count (the fill/drain ramp is excluded, as
         in Eq. 4's steady-state regime)."""
-        full = [r for r in self.cycle_log
-                if all(b is not None for b in r["busy"])]
+        full = [r for r in self.cycle_log if r.full]
         if not full:
             return {"cycles": 0, "bubble_frac": 0.0,
                     "stage_util": [0.0] * self.p, "mean_cycle_ms": 0.0,
@@ -761,21 +818,19 @@ class PipelineEngine:
                     "sampler_ms_mean": 0.0, "transfer_ms_mean": 0.0}
         busy = np.zeros((len(full), self.p))
         for k, r in enumerate(full):
-            busy[k] = r["busy"]
-            busy[k][0] += r["stall"]
+            busy[k] = r.busy
+            busy[k][0] += r.stall
         C = busy.max(axis=1)
         bubble = (C[:, None] - busy).sum() / (self.p * C.sum())
-        samplers = [r["sampler"] for r in full if r["sampler"] is not None]
-        transfers = [r["transfer"] for r in full
-                     if r.get("transfer") is not None]
+        samplers = [r.sampler for r in full if r.sampler is not None]
+        transfers = [r.transfer for r in full if r.transfer is not None]
         return {
             "cycles": len(full),
             "bubble_frac": float(bubble),
             "stage_util": [float(u) for u in busy.sum(0) / C.sum()],
             "mean_cycle_ms": float(C.mean() * 1e3),
-            "stall_ms_mean": float(np.mean([r["stall"] for r in full]) * 1e3),
-            "sample_ms_mean": float(np.mean([r["sample"] for r in full])
-                                    * 1e3),
+            "stall_ms_mean": float(np.mean([r.stall for r in full]) * 1e3),
+            "sample_ms_mean": float(np.mean([r.sample for r in full]) * 1e3),
             # pool-side decomposition (§13): sampler_ms is pure CPU
             # sampling on the workers' critical path; transfer_ms is the
             # device_get wait (in-flight compute + D2H) — previously

@@ -22,6 +22,14 @@ Endpoints:
   capacity, 503 while draining — the gateway never buffers unboundedly.
 * ``GET /healthz`` — liveness + per-replica loads.
 * ``GET /v1/stats`` — wire-level percentile summary + admission counters.
+* ``GET /metrics`` — Prometheus text exposition (§17): the gateway's own
+  wire-level instruments (TTFT / TPOT / queue histograms, request
+  counters by status, replica load) merged with every replica engine's
+  registry, each replica's families labelled ``replica="<name>"``.
+* ``GET /v1/trace`` — Chrome trace-event JSON snapshot of the gateway's
+  flight recorder merged with every replica engine's (load it in
+  ``chrome://tracing`` / Perfetto), when the gateway was constructed
+  with ``trace=True``.
 
 Every response closes its connection (``Connection: close``); clients
 stream SSE by reading to EOF — ``curl -N`` works as-is.
@@ -43,6 +51,8 @@ from repro.gateway.codec import CodecPool, get_codec
 from repro.gateway.fleet import ReplicaFleet
 from repro.gateway.router import Router
 from repro.gateway.stats import WireTrace, summarize_traces
+from repro.obs import (MetricsRegistry, StepTracer, chrome_trace,
+                       render_registries)
 
 _MAX_BODY = 8 * 1024 * 1024     # request bodies beyond this → 413
 
@@ -65,7 +75,8 @@ class GatewayServer:
 
     def __init__(self, fleet: ReplicaFleet, codec: str = "byte",
                  codec_workers: int = 2, retry_after: float = 1.0,
-                 max_tokens_cap: int = 512, trace_window: int = 4096):
+                 max_tokens_cap: int = 512, trace_window: int = 4096,
+                 trace: bool = False):
         self.fleet = fleet
         self.router = Router(fleet.replicas, retry_after=retry_after)
         self.codec_pool = CodecPool(get_codec(codec), codec_workers)
@@ -75,6 +86,29 @@ class GatewayServer:
         self._server: Optional[asyncio.AbstractServer] = None
         self._shut = False
         self.started_at = time.monotonic()
+        # telemetry plane (§17): the gateway's own wire-level registry +
+        # flight recorder; /metrics and /v1/trace merge in the replicas'
+        self.metrics = MetricsRegistry()
+        self.tracer = StepTracer(capacity=16384, enabled=trace)
+        self._ttft = self.metrics.histogram(
+            "gateway_ttft_ms", "wire time-to-first-token")
+        self._tpot = self.metrics.histogram(
+            "gateway_tpot_ms",
+            "wire mean per-output-token latency past the first")
+        self._queue = self.metrics.histogram(
+            "gateway_queue_ms",
+            "arrival -> engine admission (gateway + engine queues)")
+        self._tokens = self.metrics.counter(
+            "gateway_tokens_streamed_total",
+            "token events delivered to clients")
+
+    def _count_request(self, status: str) -> None:
+        """One labelled admission-outcome tick (counters are get-or-create,
+        so each status label materializes on first use)."""
+        self.metrics.counter(
+            "gateway_requests_total",
+            "completions requests by admission outcome",
+            status=status).inc()
 
     # -- lifecycle -----------------------------------------------------------
     async def serve(self, host: str = "127.0.0.1", port: int = 0) -> None:
@@ -131,10 +165,12 @@ class GatewayServer:
                 body = await reader.readexactly(n)
             await self._route(method, path, headers, body, writer)
         except _BadRequest as e:
+            self._count_request("bad_request")
             await _send_json(writer, 400, {"error": str(e)})
         except (ConnectionError, asyncio.IncompleteReadError):
             pass
         except Exception as e:                      # never kill the loop
+            self._count_request("error")
             try:
                 await _send_json(writer, 500, {"error": repr(e)})
             except Exception:
@@ -154,6 +190,12 @@ class GatewayServer:
             await _send_json(writer, 200, self._health())
         elif method == "GET" and path == "/v1/stats":
             await _send_json(writer, 200, self._stats())
+        elif method == "GET" and path == "/metrics":
+            await _send_text(writer, 200, self._metrics_text(),
+                             content_type="text/plain; version=0.0.4; "
+                                          "charset=utf-8")
+        elif method == "GET" and path == "/v1/trace":
+            await _send_json(writer, 200, self._trace_snapshot())
         else:
             await _send_json(writer, 404,
                              {"error": f"no route {method} {path}"})
@@ -172,6 +214,32 @@ class GatewayServer:
                 "rejected_busy": self.router.rejected_busy,
                 "rejected_draining": self.router.rejected_draining,
                 "recent": [t.as_dict() for t in traces[-16:]]}
+
+    def _metrics_text(self) -> str:
+        """Prometheus text exposition (§17): the gateway's registry plus
+        every replica engine's, each labelled ``replica="<name>"``.
+        Replica loads are refreshed at scrape time — a gauge per replica,
+        so queue pressure is visible without hitting /healthz."""
+        for name, load in self.fleet.loads().items():
+            self.metrics.gauge("gateway_replica_load",
+                               "in-flight streams per replica",
+                               replica=name).set(float(load))
+        sources = [({}, self.metrics)]
+        for rep in self.fleet.replicas:
+            obs = getattr(rep.engine, "obs", None)
+            if obs is not None:
+                sources.append(({"replica": rep.name}, obs.metrics))
+        return render_registries(sources)
+
+    def _trace_snapshot(self) -> dict:
+        """Chrome trace-event JSON over the gateway's flight recorder and
+        every replica engine's — one clock (perf_counter), one file."""
+        sources = [("gateway", self.tracer)]
+        for rep in self.fleet.replicas:
+            tr = getattr(rep.engine, "tracer", None)
+            if tr is not None:
+                sources.append((f"replica:{rep.name}", tr))
+        return chrome_trace(sources)
 
     # -- the completions endpoint -------------------------------------------
     async def _completions(self, headers: Dict[str, str], body: bytes,
@@ -200,15 +268,18 @@ class GatewayServer:
         req.arrival_time = time.perf_counter()
         res = self.router.submit(req, sink, on_done, session_id=session_id)
         if res.status == "busy":
+            self._count_request("busy")
             await _send_json(
                 writer, 429, {"error": "all replicas at capacity"},
                 extra=[("Retry-After", str(math.ceil(res.retry_after)))])
             return
         if res.status == "draining":
+            self._count_request("draining")
             await _send_json(
                 writer, 503, {"error": "gateway is draining"},
                 extra=[("Retry-After", str(math.ceil(res.retry_after)))])
             return
+        self._count_request("ok")
         trace.replica = res.replica.name
         self.traces.append(trace)
         if stream:
@@ -284,6 +355,27 @@ class GatewayServer:
             # the *delta* over so the trace stays single-clock
             trace.admission = trace.arrival + \
                 (req.admit_time - req.arrival_time)
+        # fold the wire timings into /metrics the moment the terminal
+        # event leaves — the histograms cover every finished request,
+        # not a sampled window
+        if trace.ttft_s is not None:
+            self._ttft.observe(trace.ttft_s * 1e3)
+        tpot = trace.tpot_s
+        if tpot is not None:
+            self._tpot.observe(tpot * 1e3)
+        if trace.queue_s is not None:
+            self._queue.observe(trace.queue_s * 1e3)
+        self._tokens.inc(trace.n_tokens)
+        if self.tracer.enabled and req.arrival_time:
+            # the request's wire-level life on the repo-wide clock
+            # (arrival_time is perf_counter — same axis as engine spans)
+            self.tracer.add("request", req.arrival_time,
+                            time.perf_counter(), track="gateway",
+                            name=f"req#{req.request_id}",
+                            request_id=int(req.request_id),
+                            replica=trace.replica,
+                            n_tokens=trace.n_tokens,
+                            finish_reason=req.finish_reason)
 
     async def _stream_response(self, loop, writer, req: Request,
                                trace: WireTrace, events) -> None:
@@ -379,19 +471,32 @@ def _sse(obj: dict) -> bytes:
     return b"data: " + json.dumps(obj).encode("utf-8") + b"\n\n"
 
 
+_REASONS = {200: "OK", 400: "Bad Request", 404: "Not Found",
+            413: "Payload Too Large", 429: "Too Many Requests",
+            500: "Internal Server Error", 503: "Service Unavailable"}
+
+
 async def _send_json(writer: asyncio.StreamWriter, status: int, obj: dict,
                      extra: Optional[List[Tuple[str, str]]] = None) -> None:
-    reason = {200: "OK", 400: "Bad Request", 404: "Not Found",
-              413: "Payload Too Large", 429: "Too Many Requests",
-              500: "Internal Server Error",
-              503: "Service Unavailable"}.get(status, "OK")
     body = json.dumps(obj).encode("utf-8")
-    head = [f"HTTP/1.1 {status} {reason}",
+    head = [f"HTTP/1.1 {status} {_REASONS.get(status, 'OK')}",
             "Content-Type: application/json",
             f"Content-Length: {len(body)}",
             "Connection: close"]
     for k, v in extra or []:
         head.append(f"{k}: {v}")
+    writer.write(("\r\n".join(head) + "\r\n\r\n").encode("latin-1") + body)
+    await writer.drain()
+
+
+async def _send_text(writer: asyncio.StreamWriter, status: int, text: str,
+                     content_type: str = "text/plain; charset=utf-8"
+                     ) -> None:
+    body = text.encode("utf-8")
+    head = [f"HTTP/1.1 {status} {_REASONS.get(status, 'OK')}",
+            f"Content-Type: {content_type}",
+            f"Content-Length: {len(body)}",
+            "Connection: close"]
     writer.write(("\r\n".join(head) + "\r\n\r\n").encode("latin-1") + body)
     await writer.drain()
 

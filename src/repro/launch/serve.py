@@ -67,6 +67,7 @@ from repro.core.sampler_backend import registered_backends
 from repro.engine import Engine, PipelineConfig, PipelineEngine, Request
 from repro.engine.engine import EngineConfig
 from repro.models.model import Model
+from repro.obs import StepTracer, Telemetry, write_chrome_trace
 
 
 def build_engine(arch: str, reduced: bool, algorithm: str, batch: int,
@@ -74,7 +75,8 @@ def build_engine(arch: str, reduced: bool, algorithm: str, batch: int,
                  prompt_chunk: int = 0, cache: str = "contiguous",
                  block_size: int = 16, num_blocks: int = 0,
                  stages: int = 1, microbatches: int = 0, samplers: int = 2,
-                 sampler_mode: str = None, pool_algorithm: str = None):
+                 sampler_mode: str = None, pool_algorithm: str = None,
+                 telemetry: Telemetry = None):
     cfg = get_arch(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -96,12 +98,19 @@ def build_engine(arch: str, reduced: bool, algorithm: str, batch: int,
         ecfg = PipelineConfig(stages=stages, microbatches=microbatches,
                               sampler_mode=sampler_mode or "host",
                               **common)
-        return PipelineEngine(cfg, params, ecfg)
+        return PipelineEngine(cfg, params, ecfg, telemetry=telemetry)
     # single-stage default stays "device" (the §2 fused overlap loop);
     # "host" disaggregates the decode-step sampling to the CPU pool (§13)
     ecfg = EngineConfig(overlap=overlap, prompt_chunk=prompt_chunk,
                         sampler_mode=sampler_mode or "device", **common)
-    return Engine(cfg, params, ecfg)
+    return Engine(cfg, params, ecfg, telemetry=telemetry)
+
+
+def _trace_telemetry(trace_out: str) -> Telemetry:
+    """A telemetry bundle with the flight recorder ON — only built when
+    --trace-out asks for a trace, so default runs pay nothing."""
+    return Telemetry(tracer=StepTracer(capacity=65536, enabled=True)) \
+        if trace_out else None
 
 
 def synth_requests(n: int, vocab: int, max_new: int, rng_seed: int = 0,
@@ -139,7 +148,8 @@ def build_fleet(args):
                      block_size=args.block_size, num_blocks=args.num_blocks,
                      stages=args.stages, microbatches=args.microbatches,
                      samplers=args.samplers, sampler_mode=args.sampler_mode,
-                     pool_algorithm=args.pool_algorithm)
+                     pool_algorithm=args.pool_algorithm,
+                     telemetry=_trace_telemetry(args.trace_out))
         for _ in range(args.replicas)]
     return ReplicaFleet(engines, capacity=args.capacity)
 
@@ -153,7 +163,8 @@ def run_gateway(args) -> None:
     from repro.gateway import GatewayServer
 
     async def _serve() -> None:
-        gw = GatewayServer(build_fleet(args), codec=args.codec)
+        gw = GatewayServer(build_fleet(args), codec=args.codec,
+                           trace=bool(args.trace_out))
         await gw.serve(args.http_host, args.http_port)
         stop = asyncio.Event()
         loop = asyncio.get_running_loop()
@@ -166,6 +177,15 @@ def run_gateway(args) -> None:
         print("draining gateway ...")
         await gw.shutdown()
         print("gateway closed")
+        if args.trace_out:
+            # after shutdown: every replica drained, every span recorded
+            sources = [("gateway", gw.tracer)] + [
+                (f"replica:{rep.name}", rep.engine.tracer)
+                for rep in gw.fleet.replicas
+                if getattr(rep.engine, "tracer", None) is not None]
+            n = write_chrome_trace(args.trace_out, sources)
+            print(f"wrote {n} trace events to {args.trace_out} "
+                  f"(chrome://tracing / ui.perfetto.dev)")
 
     asyncio.run(_serve())
 
@@ -244,6 +264,13 @@ def main() -> None:
                     help="per-replica open-request bound (429 beyond it)")
     ap.add_argument("--codec", default="byte",
                     help="registered text codec for the gateway")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable the §17 flight recorder and write a "
+                         "Chrome trace-event JSON (chrome://tracing / "
+                         "ui.perfetto.dev) to PATH on exit; covers the "
+                         "engines' step spans, the pool workers' "
+                         "fetch/sample spans, and (gateway mode) the "
+                         "wire-level request spans")
     args = ap.parse_args()
 
     if args.gateway:
@@ -259,7 +286,8 @@ def main() -> None:
                        stages=args.stages, microbatches=args.microbatches,
                        samplers=args.samplers,
                        sampler_mode=args.sampler_mode,
-                       pool_algorithm=args.pool_algorithm)
+                       pool_algorithm=args.pool_algorithm,
+                       telemetry=_trace_telemetry(args.trace_out))
     reqs = synth_requests(args.requests, eng.cfg.vocab_size, args.max_new,
                           long_prompts=args.long_prompts, seed=args.seed,
                           greedy=args.greedy, stop_sequences=stop_sequences)
@@ -302,15 +330,16 @@ def main() -> None:
               f"sampler={rep['sampler_ms_mean']:.2f}ms "
               f"(+{rep['transfer_ms_mean']:.2f}ms transfer)")
         print(f"per-stage utilization: {util}")
-    elif eng.client.is_host and eng.stats_log:
+    elif eng.client.is_host:
         stalls = [s["stall_ms"] for s in eng.stats_log if "stall_ms" in s]
         samp = [s["sampler_ms"] for s in eng.stats_log if "sampler_ms" in s]
         xfer = [s["transfer_ms"] for s in eng.stats_log
                 if "transfer_ms" in s]
-        if stalls:
-            print(f"host sampler pool: commit_stall={np.mean(stalls):.2f}ms "
-                  f"sampler={np.mean(samp):.2f}ms "
-                  f"(+{np.mean(xfer):.2f}ms transfer) per step")
+        # a run whose work all landed via prefill/chunk paths commits no
+        # decode steps — report n/a instead of np.mean([]) warnings
+        fmt = lambda xs: f"{np.mean(xs):.2f}ms" if xs else "n/a"
+        print(f"host sampler pool: commit_stall={fmt(stalls)} "
+              f"sampler={fmt(samp)} (+{fmt(xfer)} transfer) per step")
     eng.close()
     if first_event_at is not None:
         print(f"first streamed event after {(first_event_at - t0) * 1e3:.1f}ms "
@@ -334,9 +363,18 @@ def main() -> None:
         print(f"TTFT p50={np.percentile(ttft, 50) * 1e3:.1f}ms "
               f"p95={np.percentile(ttft, 95) * 1e3:.1f}ms")
     if eng.stats_log:
-        acc = np.mean([s["accept_rate"] for s in eng.stats_log if s])
-        print(f"decision plane: mean fast-path acceptance {acc:.2%} "
+        # NaN accept rates mean "no active rows sampled that step" (§13);
+        # keep them out of the headline mean
+        accs = [s.accept_rate for s in eng.stats_log
+                if np.isfinite(s.accept_rate)]
+        acc = f"{np.mean(accs):.2%}" if accs else "n/a"
+        print(f"decision plane: mean fast-path acceptance {acc} "
               f"({len(eng.stats_log)} iterations)")
+    if args.trace_out:
+        n = write_chrome_trace(args.trace_out,
+                               [("engine", eng.tracer)])
+        print(f"wrote {n} trace events to {args.trace_out} "
+              f"(chrome://tracing / ui.perfetto.dev)")
 
 
 if __name__ == "__main__":
