@@ -50,10 +50,18 @@ interface rather than inside the engine). Seeded streams are asserted
 bit-identical to an in-process ``Engine.generate()`` run of the same
 request set: the whole gateway stack must be invisible in the tokens.
 
+``--disaggregate`` compares fleet *shapes* at the wire (DESIGN.md §18):
+the same seeded Poisson trace over two paged replicas run colocated
+(each request served end-to-end on one replica) vs disaggregated (a
+prefill role and a decode role, every stream migrating its KV blocks at
+its first committed token), with goodput-under-SLO per offered rate and
+every wire stream asserted bit-identical to the in-process reference —
+the migration must be invisible in the tokens.
+
     PYTHONPATH=src python -m benchmarks.fig_latency [--smoke]
         [--rates 2,6,12] [--requests 48] [--bimodal] [--check-envelope]
-        [--gateway] [--replicas 1,2] [--slo-ttft 250] [--slo-tpot 25]
-        [--out BENCH_latency.json]
+        [--gateway] [--replicas 1,2] [--disaggregate]
+        [--slo-ttft 250] [--slo-tpot 25] [--out BENCH_latency.json]
 """
 from __future__ import annotations
 
@@ -459,15 +467,17 @@ def _gateway_payloads(cfg: ModelConfig, n: int, max_new: int,
             for i in range(n)]
 
 
-def _gw_engine() -> Engine:
+def _gw_engine(cache: str = "contiguous") -> Engine:
     """A fresh warmed replica engine — the device-mode bench config, but
-    never cached: the fleet owns and closes its engines."""
+    never cached: the fleet owns and closes its engines. ``cache="paged"``
+    builds the block-pool layout the disaggregated fleets migrate
+    (streams are layout-invariant, DESIGN.md §9)."""
     cfg = _bench_model()
     eng = Engine(cfg, _params(cfg), EngineConfig(
         max_batch=8, max_seq_len=64, algorithm="reference",
         shvs=SHVSConfig(hot_size=min(1024, VOCAB // 4)),
         k_cap=min(256, VOCAB), prompt_bucket=16, overlap=True,
-        sampler_mode="device"))
+        sampler_mode="device", cache=cache, block_size=16))
     _warm(eng, cfg)
     return eng
 
@@ -605,6 +615,93 @@ def gateway_sweep(rates, n_requests: int, replicas_list=(1, 2),
     return rows
 
 
+def disagg_sweep(rates, n_requests: int, max_new: int = MAX_NEW,
+                 slo_ttft_ms: float = GW_SLO_TTFT_MS,
+                 slo_tpot_ms: float = GW_SLO_TPOT_MS, emit_fn=emit) -> list:
+    """Colocated vs disaggregated fleets on the identical seeded Poisson
+    trace (DESIGN.md §18): both arms are two paged replicas behind a live
+    gateway — ``colocated`` serves every request end-to-end on one
+    replica, ``disaggregated`` splits the pair into a prefill role and a
+    decode role so every stream prefills on one instance and migrates its
+    KV blocks to the other at its first committed token. Per offered rate
+    and arm, client-measured wire percentiles + goodput-under-SLO; every
+    wire stream is asserted bit-identical to the in-process reference, so
+    the migration is provably invisible in the tokens and the comparison
+    is over identical work."""
+    import asyncio
+
+    from repro.gateway import GatewayServer, ReplicaFleet
+    from repro.gateway.stats import goodput_under_slo
+
+    cfg = _bench_model()
+    payloads = _gateway_payloads(cfg, n_requests, max_new)
+    ref = _gateway_reference(payloads, max_new)
+    rows = []
+
+    async def _sweep_one(tag: str, roles) -> None:
+        fleet = ReplicaFleet([_gw_engine(cache="paged") for _ in range(2)],
+                             capacity=16, roles=roles)
+        gw = GatewayServer(fleet)
+        await gw.serve(port=0)
+        try:
+            handed_before = 0
+            for rate in rates:
+                arrivals = poisson_arrivals(n_requests, rate, seed=0)
+                results, t0, makespan, n429 = await _drive_gateway(
+                    gw, payloads, arrivals)
+                streams = {i: r.tokens for i, r in enumerate(results)}
+                assert streams == ref, (
+                    f"wire streams ({tag}, {rate} rps) diverged from "
+                    "in-process Engine.generate() — migration must be "
+                    "invisible in the tokens")
+                handed_now = sum(r.handed_off
+                                 for r in fleet.prefill_replicas)
+                handed = handed_now - handed_before
+                handed_before = handed_now
+                if roles:
+                    assert handed > 0, (
+                        f"disaggregated arm at {rate} rps migrated "
+                        "nothing — the handoff path was not exercised")
+                traces = [_wire_trace(i, t0 + float(arrivals[i]), r)
+                          for i, r in enumerate(results)]
+                goodput = goodput_under_slo(traces, slo_ttft_ms,
+                                            slo_tpot_ms, makespan)
+                toks = sum(len(s) for s in streams.values())
+                row = {
+                    "mode": tag, "rate_rps": rate,
+                    "n_requests": n_requests, "tokens": toks,
+                    "makespan_s": float(makespan),
+                    "throughput_tps": float(toks / makespan)
+                    if makespan else 0.0,
+                    "retried_429": n429, "handed_off": handed,
+                    "ttft_ms": _pcts([t.ttft_s for t in traces
+                                      if t.ttft_s is not None]),
+                    "tpot_ms": _pcts([t.tpot_s for t in traces
+                                      if t.tpot_s is not None]),
+                    "queue_ms": _pcts([t.queue_s for t in traces
+                                       if t.queue_s is not None]),
+                    "goodput": goodput,
+                }
+                rows.append(row)
+                emit_fn(
+                    f"fig_latency.{tag}.rate{rate:g}",
+                    goodput["goodput_rps"],
+                    f"goodput {goodput['goodput_rps']:.2f} rps "
+                    f"({goodput['requests_met']}/{n_requests} in SLO) | "
+                    f"wire ttft p50={row['ttft_ms']['p50']:.1f} "
+                    f"p95={row['ttft_ms']['p95']:.1f}ms | "
+                    f"tpot p95={row['tpot_ms']['p95']:.1f}ms | "
+                    f"migrated {handed}/{n_requests} | "
+                    f"{row['throughput_tps']:.1f} tok/s")
+        finally:
+            await gw.shutdown()
+
+    for tag, roles in (("colocated-2r", None),
+                       ("disagg-1p1d", ["prefill", "decode"])):
+        asyncio.run(_sweep_one(tag, roles))
+    return rows
+
+
 def write_trajectory(rows: list, out: str = "BENCH_latency.json",
                      **extra) -> dict:
     """Append one trajectory point (config + all sweep rows) to ``out`` —
@@ -636,7 +733,22 @@ def run(emit_fn=emit, smoke: bool = False, out: str = "BENCH_latency.json",
         rates=None, n_requests: int = None, bimodal: bool = False,
         check_envelope: bool = False, gateway: bool = False,
         replicas=(1, 2), slo_ttft_ms: float = GW_SLO_TTFT_MS,
-        slo_tpot_ms: float = GW_SLO_TPOT_MS) -> list:
+        slo_tpot_ms: float = GW_SLO_TPOT_MS,
+        disaggregate: bool = False) -> list:
+    if disaggregate:
+        if rates is None:
+            rates = (4.0, 12.0) if smoke else (2.0, 6.0, 12.0)
+        if n_requests is None:
+            n_requests = 10 if smoke else 32
+        rows = disagg_sweep(rates, n_requests,
+                            max_new=6 if smoke else MAX_NEW,
+                            slo_ttft_ms=slo_ttft_ms,
+                            slo_tpot_ms=slo_tpot_ms, emit_fn=emit_fn)
+        if out:
+            write_trajectory(rows, out, workload="disagg",
+                             slo={"ttft_ms": slo_ttft_ms,
+                                  "tpot_ms": slo_tpot_ms})
+        return rows
     if gateway:
         if rates is None:
             rates = (4.0, 12.0) if smoke else (2.0, 6.0, 12.0)
@@ -699,6 +811,12 @@ if __name__ == "__main__":
                          "goodput-under-SLO (ISSUE 8)")
     ap.add_argument("--replicas", default="1,2",
                     help="comma-separated replica counts for --gateway")
+    ap.add_argument("--disaggregate", action="store_true",
+                    help="colocated (2x both) vs disaggregated (1 prefill "
+                         "+ 1 decode, paged-KV migration at first token) "
+                         "fleets over localhost HTTP/SSE on the identical "
+                         "seeded trace; goodput-under-SLO per offered "
+                         "rate (DESIGN.md §18)")
     ap.add_argument("--slo-ttft", type=float, default=GW_SLO_TTFT_MS,
                     help="wire TTFT SLO (ms) for goodput")
     ap.add_argument("--slo-tpot", type=float, default=GW_SLO_TPOT_MS,
@@ -712,4 +830,5 @@ if __name__ == "__main__":
         n_requests=args.requests, bimodal=args.bimodal,
         check_envelope=args.check_envelope, gateway=args.gateway,
         replicas=tuple(int(r) for r in args.replicas.split(",")),
-        slo_ttft_ms=args.slo_ttft, slo_tpot_ms=args.slo_tpot)
+        slo_ttft_ms=args.slo_ttft, slo_tpot_ms=args.slo_tpot,
+        disaggregate=args.disaggregate)

@@ -6,5 +6,7 @@ from repro.engine.decision_client import (DecisionPlaneClient,  # noqa: F401
 from repro.engine.engine import (Engine, EngineConfig,  # noqa: F401
                                  GenerationEvent, SlotParams, StreamCursor,
                                  generate_stream, locked_api)
+from repro.engine.migration import KVPayload  # noqa: F401
+from repro.engine.handoff import HandoffScheduler  # noqa: F401
 from repro.engine.pipeline import (MicrobatchPlanner,  # noqa: F401
                                    PipelineConfig, PipelineEngine)

@@ -82,8 +82,10 @@ from repro.core.sampling import SamplingParams
 from repro.core import penalties as pen
 from repro.engine.decision_client import (DecisionPlaneClient,
                                           canonical_sampler_mode)
+from repro.engine.migration import KVPayload, stamp_export
 from repro.engine.paged_cache import (BlockAllocator, PagedCacheConfig,
-                                      init_paged_cache)
+                                      gather_slot_kv, init_paged_cache,
+                                      scatter_slot_kv)
 from repro.engine.request import Request, RequestState
 from repro.engine.scheduler import ChunkTask, Scheduler
 from repro.models.attention import flat_block_indices, scatter_block_kv
@@ -447,6 +449,12 @@ class Engine:
         # replica keeps the most recent window instead of growing forever
         self.stats_log: Deque[StepRecord] = deque(
             maxlen=engine_cfg.stats_window)
+        # migration flow counters (§18) + the free-block gauge the router
+        # debugs against (-1 signals "contiguous cache, no pool")
+        self.migrations_in = 0
+        self.migrations_out = 0
+        self._metrics.free_blocks.set(
+            float(self.alloc.num_free) if self._paged else -1.0)
         self._hot_counts = hot_counts
         self._controller = None
         hot = None
@@ -822,6 +830,195 @@ class Engine:
             if client is not None:
                 client.close()
 
+    # -- KV migration (prefill/decode disaggregation, DESIGN.md §18) -----------
+    @locked_api
+    def export_request(self, request_id: int) -> KVPayload:
+        """Quiesce one RUNNING request at the commit boundary and detach
+        it as a portable :class:`KVPayload` (DESIGN.md §18).
+
+        The quiesce point is ``flush()``: every dispatched token is
+        committed, so the invariants the payload is built on hold exactly —
+        the cache holds ``T`` entries covering the prefilled window plus
+        all-but-the-last committed token, ``last_tokens[slot]`` is
+        ``output[-1]`` (sampled but not yet forwarded), the penalty
+        histograms already count it, and the RNG position is
+        ``len(output)``. Importing on any engine with the same parameters
+        resumes the stream bit-identically (tests/test_disagg.py).
+
+        Raises ``KeyError`` for an unknown/unslotted id and ``ValueError``
+        for a request that cannot migrate (mid-chunked-prefill, no
+        committed output yet, or already finished — the flush may finish
+        it, in which case it retires here and there is nothing to move).
+        """
+        self.flush()
+        req = None
+        for s in self.scheduler.slots:
+            if s is not None and s.request_id == request_id:
+                req = s
+                break
+        if req is None:
+            raise KeyError(
+                f"request {request_id} is not slotted on this engine")
+        if req.state is not RequestState.RUNNING or not req.output:
+            raise ValueError(
+                f"request {request_id} cannot migrate: state={req.state}, "
+                f"{len(req.output)} committed tokens (needs a RUNNING "
+                "request past its first token)")
+        if req.should_stop():
+            raise ValueError(f"request {request_id} already finished")
+        t0 = time.perf_counter()
+        slot = req.slot
+        assert int(self._pos[slot]) == len(req.output), \
+            "quiesce invariant violated: RNG position != committed output"
+        if self._paged:
+            T = int(self._slot_len[slot])
+            k, v = gather_slot_kv(self.cache, self.alloc.owned[slot], T,
+                                  self.pcfg)
+            self.alloc.export_slot(slot)
+            self._slot_len[slot] = 0
+        else:
+            if set(self.cache.keys()) != {"k", "v", "len", "pos"}:
+                raise RuntimeError(
+                    "KV migration supports plain attention caches only "
+                    f"(leaves: {sorted(self.cache.keys())})")
+            T = int(np.asarray(self.cache["len"])[slot])
+            k = np.asarray(self.cache["k"][:, slot, :T])
+            v = np.asarray(self.cache["v"][:, slot, :T])
+        payload = KVPayload(
+            request_id=req.request_id, prompt=list(req.prompt),
+            output=list(req.output), max_new_tokens=req.max_new_tokens,
+            sampling=req.sampling, eos_token=req.eos_token,
+            prompt_offset=req.prompt_offset,
+            arrival_time=req.arrival_time, kv_len=T, k=k, v=v,
+            prompt_counts=np.asarray(self.pstate.prompt_counts[slot]),
+            output_counts=np.asarray(self.pstate.output_counts[slot]),
+            last_token=int(req.output[-1]), next_pos=len(req.output),
+            source=f"engine@{id(self):x}", request=req)
+        # detach: frees the slot (on_free releases any remaining block
+        # claim and resets the SlotParams row) without re-queueing
+        self.scheduler.remove(req)
+        req.kv_payload = payload
+        self.migrations_out += 1
+        self._metrics.migrations_out.inc()
+        if self._paged:
+            self._metrics.free_blocks.set(float(self.alloc.num_free))
+        stamp_export(payload)
+        if self.tracer.enabled:
+            self.tracer.add("kv_migrate", t0, payload.exported_at,
+                            name=f"export#{req.request_id}",
+                            request_id=int(req.request_id), kv_len=T,
+                            bytes=payload.nbytes, direction="out")
+        return payload
+
+    @locked_api
+    def import_request(self, payload: KVPayload) -> Request:
+        """Admit a migrated request carrying its KV (DESIGN.md §18): the
+        payload rides through the normal admission path (queueing, slot
+        assignment, block gating) and ``_admit`` installs it directly —
+        no re-prefill. Returns the request object that will stream here."""
+        self._validate_payload(payload)
+        req = payload.request if payload.request is not None \
+            else payload.to_request()
+        req.kv_payload = payload
+        req.slot = -1
+        req.state = RequestState.WAITING
+        req.prompt_pos = 0
+        self.submit([req])
+        self._metrics.pending_imports.set(float(sum(
+            1 for r in self.scheduler.waiting if r.kv_payload is not None)))
+        return req
+
+    def _validate_payload(self, p: KVPayload) -> None:
+        L = self.cfg.num_layers
+        kv, hd = self.cfg.num_kv_heads, self.cfg.resolved_head_dim
+        want = (L, p.kv_len, kv, hd)
+        if tuple(p.k.shape) != want or tuple(p.v.shape) != want:
+            raise ValueError(
+                f"payload KV shape {tuple(p.k.shape)} does not match this "
+                f"engine's model ({want})")
+        if p.prompt_counts.shape != (self.cfg.vocab_size,):
+            raise ValueError(
+                f"payload vocab {p.prompt_counts.shape[0]} != "
+                f"{self.cfg.vocab_size}")
+        if p.kv_len + 1 > self.ecfg.max_seq_len:
+            raise ValueError(
+                f"payload of {p.kv_len} KV entries cannot decode within "
+                f"max_seq_len={self.ecfg.max_seq_len}")
+        if p.next_pos != len(p.output) or not p.output:
+            raise ValueError("corrupt payload: RNG position != output")
+
+    def _install_imports(self, carried: List[Request]) -> None:
+        """Install migrated requests' state into their assigned slots —
+        the import half of the migration seam (DESIGN.md §18). Replaces
+        the prefill of ``_admit``: KV entries are scattered bitwise into
+        freshly allocated blocks (or the slot's slab rows), the penalty
+        histograms and sampling contract land in the slot's rows, and the
+        RNG position resumes at ``len(output)`` — the decode program
+        cannot tell the request ever moved."""
+        for r in carried:
+            p: KVPayload = r.kv_payload
+            # consumed on install: a later preemption of this request
+            # falls back to recompute-on-resume over prompt+output
+            r.kv_payload = None
+            t0 = time.perf_counter()
+            if self.tracer.enabled and p.exported_at:
+                self.tracer.add("handoff_wait", p.exported_at, t0,
+                                name=f"handoff#{r.request_id}",
+                                request_id=int(r.request_id),
+                                kv_len=int(p.kv_len))
+            slot, T = r.slot, int(p.kv_len)
+            if self._paged:
+                self.alloc.release(slot)       # stale claims (defensive)
+                self.alloc.ensure(slot, T)
+                self._slot_len[slot] = T
+                self._push_block_table()
+                self.cache = scatter_slot_kv(
+                    self.cache, self.alloc.owned[slot], p.k, p.v, self.pcfg)
+                cache = dict(self.cache)
+            else:
+                cache = dict(self.cache)
+                cache["k"] = cache["k"].at[:, slot, :T].set(
+                    jnp.asarray(p.k, cache["k"].dtype))
+                cache["v"] = cache["v"].at[:, slot, :T].set(
+                    jnp.asarray(p.v, cache["v"].dtype))
+            cache["len"] = cache["len"].at[slot].set(T)
+            self.cache = cache
+            self.pstate = pen.PenaltyState(
+                prompt_counts=self.pstate.prompt_counts.at[slot].set(
+                    jnp.asarray(p.prompt_counts)),
+                output_counts=self.pstate.output_counts.at[slot].set(
+                    jnp.asarray(p.output_counts)))
+            self.last_tokens = self.last_tokens.at[slot].set(
+                jnp.int32(p.last_token))
+            self._sp.set_row(slot, r.sampling)
+            self._nonce[slot] = np.uint32(r.request_id)
+            self._pos[slot] = int(p.next_pos)
+            r.handoff_count += 1
+            self.migrations_in += 1
+            self._metrics.migrations_in.inc()
+            if self.tracer.enabled:
+                self.tracer.add("kv_migrate", t0, time.perf_counter(),
+                                name=f"import#{r.request_id}",
+                                request_id=int(r.request_id), kv_len=T,
+                                bytes=p.nbytes, direction="in")
+        if self._paged:
+            self._metrics.free_blocks.set(float(self.alloc.num_free))
+        self._metrics.pending_imports.set(float(sum(
+            1 for r in self.scheduler.waiting if r.kv_payload is not None)))
+
+    @locked_api
+    def migration_stats(self) -> dict:
+        """Per-engine disaggregation counters for ``GET /v1/stats`` —
+        free-block headroom and migration flow (DESIGN.md §18)."""
+        return {
+            "free_blocks": self.alloc.num_free if self._paged else None,
+            "migrations_in": self.migrations_in,
+            "migrations_out": self.migrations_out,
+            "pending_imports": sum(
+                1 for r in self.scheduler.waiting
+                if r.kv_payload is not None),
+        }
+
     # -- commit ----------------------------------------------------------------
     def _resolve_host_pending(self) -> None:
         """Host mode (§13): collect the in-flight ticket's sampled tokens
@@ -922,6 +1119,8 @@ class Engine:
                         samplers=act.samplers,
                         sampler_mode=act.sampler_mode)
         self._metrics.observe_step(rec)
+        if self._paged:
+            self._metrics.free_blocks.set(float(self.alloc.num_free))
         self.stats_log.append(rec)
         return rec
 
@@ -976,7 +1175,18 @@ class Engine:
         A *resumed* request (re-queued by preemption with committed output,
         §9) re-prefills prompt+output and samples its next token at output
         position len(output) — the (request, position) RNG keying makes the
-        continuation bit-identical to the unpreempted stream."""
+        continuation bit-identical to the unpreempted stream.
+
+        A *migrated* request (carrying a :class:`KVPayload`, §18) skips
+        the prefill entirely: its KV, penalty state, and RNG position are
+        installed bitwise into the assigned slot."""
+        carried = [r for r in new_requests if r.kv_payload is not None]
+        if carried:
+            self._install_imports(carried)
+            cids = {id(r) for r in carried}
+            new_requests = [r for r in new_requests if id(r) not in cids]
+            if not new_requests:
+                return
         t_pf = time.perf_counter()
         if self.tracer.enabled:
             # arrival -> admission wait per request (0-stamped offline

@@ -103,6 +103,19 @@ class BlockAllocator:
         self.free.extend(reversed(self.owned[slot]))
         self.owned[slot] = []
 
+    def export_slot(self, slot: int) -> List[int]:
+        """Detach and return ``slot``'s block ids — the export half of the
+        migration seam (DESIGN.md §18). The caller must have gathered the
+        blocks' contents (:func:`gather_slot_kv`) *before* detaching; the
+        returned ids are meaningless on any other allocator — an importer
+        allocates fresh blocks via :meth:`ensure` and scatters into those,
+        so source and target pools never need to share ids. Free-count
+        conservation: exactly ``blocks_needed(length)`` ids return to the
+        free list (tests/test_property.py)."""
+        blocks = list(self.owned[slot])
+        self.release(slot)
+        return blocks
+
     def table(self, batch: int) -> np.ndarray:
         t = np.full((batch, self.pcfg.max_blocks_per_seq), -1, np.int32)
         for s, blocks in enumerate(self.owned):
@@ -136,6 +149,59 @@ def paged_write(cache: dict, layer_kv: Tuple[jnp.ndarray, jnp.ndarray],
     cache["k_pool"] = scatter_block_kv(cache["k_pool"], k_new, flat)
     cache["v_pool"] = scatter_block_kv(cache["v_pool"], v_new, flat)
     cache["len"] = cache["len"] + counts.astype(jnp.int32)
+    return cache
+
+
+def gather_slot_kv(cache: dict, blocks: List[int], length: int,
+                   pcfg: PagedCacheConfig
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+    """Materialize ONE slot's contiguous ``(L, length, kv, hd)`` K/V from
+    its block list — the layout-erasing read of the migration export seam
+    (DESIGN.md §18). Values are copied bitwise; only WHERE they live
+    changes, exactly the §9 pages-never-change-values property."""
+    L = cache["k_pool"].shape[0]
+    trail = cache["k_pool"].shape[3:]
+    if length <= 0 or not blocks:
+        z = np.zeros((L, 0) + tuple(trail), cache["k_pool"].dtype)
+        return z, z.copy()
+    assert len(blocks) * pcfg.block_size >= length, \
+        "block list does not cover the requested length"
+    idx = jnp.asarray(np.asarray(blocks, np.int32))
+
+    def gather(pool):
+        g = pool[:, idx]                       # (L, nb, bs, kv, hd)
+        nb = g.shape[1]
+        return np.asarray(
+            g.reshape(L, nb * pcfg.block_size, *trail)[:, :length])
+
+    return gather(cache["k_pool"]), gather(cache["v_pool"])
+
+
+def scatter_slot_kv(cache: dict, blocks: List[int], k: np.ndarray,
+                    v: np.ndarray, pcfg: PagedCacheConfig) -> dict:
+    """Write contiguous ``(L, T, kv, hd)`` K/V into ``blocks`` (freshly
+    allocated on the importing side) — the import half of the migration
+    seam. Runs eagerly: imports are off the decode hot path, and the ops
+    chain onto any in-flight program through the cache futures like every
+    other admission-time insert."""
+    L, T = k.shape[0], k.shape[1]
+    nb = len(blocks)
+    assert nb * pcfg.block_size >= T, "not enough blocks for the payload"
+    idx = jnp.asarray(np.asarray(blocks, np.int32))
+
+    def put(pool, rows):
+        rows = np.asarray(rows)
+        pad = nb * pcfg.block_size - T
+        if pad:
+            rows = np.concatenate(
+                [rows, np.zeros((L, pad) + rows.shape[2:], rows.dtype)],
+                axis=1)
+        rows = rows.reshape(L, nb, pcfg.block_size, *rows.shape[2:])
+        return pool.at[:, idx].set(jnp.asarray(rows, pool.dtype))
+
+    cache = dict(cache)
+    cache["k_pool"] = put(cache["k_pool"], k)
+    cache["v_pool"] = put(cache["v_pool"], v)
     return cache
 
 

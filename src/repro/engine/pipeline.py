@@ -391,6 +391,16 @@ class PipelineEngine:
     def submit(self, requests: List[Request]) -> None:
         if self._closed:
             raise RuntimeError("PipelineEngine is closed")
+        for r in requests:
+            if r.kv_payload is not None:
+                # KV migration (DESIGN.md §18) targets the single-stage
+                # engine: the pipeline's per-stage cache shards have no
+                # import seam yet — refuse loudly instead of silently
+                # re-prefilling a payload-carrying request
+                raise ValueError(
+                    f"request {r.request_id} carries a KVPayload; "
+                    "PipelineEngine does not support KV import — "
+                    "route migrations to a single-stage Engine")
         if self._paged:
             for r in requests:
                 if self._blocks_for(r) > self.pcfg.num_blocks:

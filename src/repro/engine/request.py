@@ -41,6 +41,12 @@ class Request:
     #                          (benchmarks/fig_latency.py)
     preempt_count: int = 0   # times evicted under KV-block pressure (§9)
     truncated: bool = False  # stopped at cache capacity (paged decode, §9)
+    kv_payload: Optional[object] = None  # carried KV from a migration
+    #                          export (engine.migration.KVPayload) —
+    #                          consumed (set back to None) when admission
+    #                          installs it, so a later preemption falls
+    #                          back to recompute-on-resume (DESIGN.md §18)
+    handoff_count: int = 0   # completed cross-instance migrations (§18)
 
     def record_token(self, tok: int, now: float) -> None:
         """Commit one sampled token into request state (single source of

@@ -146,6 +146,24 @@ class Scheduler:
             self.on_free(slot, victim)
         self.waiting.insert(0, victim)
 
+    def remove(self, victim: Request) -> None:
+        """Detach a slotted request WITHOUT re-queueing it — the migration
+        export path (DESIGN.md §18). Frees the slot exactly like
+        :meth:`preempt` (``on_free`` releases KV blocks and resets the
+        sampling-contract row) but leaves the request's destination to the
+        caller: committed output survives on the request object, and the
+        exported :class:`~repro.engine.migration.KVPayload` carries
+        everything a target engine needs to resume."""
+        slot = victim.slot
+        assert 0 <= slot < self.num_slots and self.slots[slot] is victim, \
+            "remove target is not slotted"
+        self.slots[slot] = None
+        victim.slot = -1
+        victim.state = RequestState.WAITING
+        victim.prompt_pos = 0
+        if self.on_free is not None:
+            self.on_free(slot, victim)
+
     def _admission_order(self) -> List[int]:
         """Indices into ``waiting`` in admission order.
 

@@ -35,7 +35,7 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
 from repro.engine.engine import GenerationEvent, StreamCursor
-from repro.engine.request import Request
+from repro.engine.request import Request, RequestState
 
 #: sentinel asking a replica worker to exit its loop
 _STOP = object()
@@ -48,12 +48,20 @@ _IDLE_POLL = 0.02
 
 @dataclass
 class _Work:
-    """One submission crossing the bridge into a replica worker."""
+    """One submission crossing the bridge into a replica worker.
+
+    ``emitted`` is the number of tokens already delivered to the sink by
+    a previous replica (a prefill→decode handoff, DESIGN.md §18) — the
+    receiving worker's cursor starts there so no token is re-streamed.
+    ``session_id`` rides along so the handoff can honor decode-side
+    session affinity."""
 
     request: Request
     sink: Callable[[GenerationEvent], None]
     on_done: Optional[Callable[[Request, Optional[BaseException]], None]] \
         = None
+    emitted: int = 0
+    session_id: Optional[str] = None
 
 
 @dataclass
@@ -65,20 +73,38 @@ class _Handle:
 
     def __post_init__(self):
         self.cursor = StreamCursor(self.work.request)
+        self.cursor.emitted = self.work.emitted
 
 
 class Replica:
-    """One engine on one worker thread behind a single-owner inbox."""
+    """One engine on one worker thread behind a single-owner inbox.
 
-    def __init__(self, name: str, engine, capacity: int = 16):
+    ``role`` (DESIGN.md §18): ``"both"`` (colocated default — admit and
+    decode), ``"prefill"`` (admit prompts; once a request commits its
+    first token, offer it to the handoff hook, which reserves a
+    decode-role replica and receives the request's exported
+    :class:`~repro.engine.migration.KVPayload` through the inbox), or
+    ``"decode"`` (never admitted to by the router; accepts migrations
+    via :meth:`reserve` + :meth:`submit_reserved`). A prefill replica
+    whose handoff hook finds no decode capacity keeps decoding the
+    request itself and retries next loop — strict affinity can refuse a
+    migration, never stall a stream."""
+
+    def __init__(self, name: str, engine, capacity: int = 16,
+                 role: str = "both"):
         assert capacity >= 1
+        assert role in ("both", "prefill", "decode"), role
         self.name = name
         self.engine = engine
         self.capacity = capacity
+        self.role = role
+        self._handoff: Optional[Callable[[Optional[str]],
+                                         Optional["Replica"]]] = None
         self._inbox: "queue.Queue" = queue.Queue()
         self._lock = threading.Lock()
         self._load = 0                 # open requests (queued + in flight)
         self._served = 0               # finished streams (stats)
+        self._handed_off = 0           # streams migrated out (stats)
         self._accepting = True
         self._drained = threading.Event()
         self._drained.set()
@@ -99,6 +125,11 @@ class Replica:
             return self._served
 
     @property
+    def handed_off(self) -> int:
+        with self._lock:
+            return self._handed_off
+
+    @property
     def accepting(self) -> bool:
         with self._lock:
             return self._accepting and not self._closed
@@ -109,9 +140,29 @@ class Replica:
             self._thread.start()
         return self
 
+    def set_handoff(self, hook: Callable[[Optional[str]],
+                                         Optional["Replica"]]) -> None:
+        """Install the handoff policy (prefill role): called with the
+        stream's session id; must RESERVE capacity on the returned decode
+        replica (or return None to retry later)."""
+        self._handoff = hook
+
+    def stats(self) -> dict:
+        """Router-debuggability snapshot for ``GET /v1/stats`` (§18):
+        role/load/flow plus the engine's free-block and migration
+        counters when it exposes them."""
+        with self._lock:
+            s = {"role": self.role, "load": self._load,
+                 "served": self._served, "handed_off": self._handed_off,
+                 "accepting": self._accepting and not self._closed}
+        mig = getattr(self.engine, "migration_stats", None)
+        if mig is not None:
+            s.update(mig())
+        return s
+
     def try_submit(self, request: Request,
                    sink: Callable[[GenerationEvent], None],
-                   on_done=None) -> bool:
+                   on_done=None, session_id: Optional[str] = None) -> bool:
         """Admit one request, or refuse (False) when the replica is at
         capacity or no longer accepting — the backpressure edge. Never
         blocks and never buffers beyond ``capacity``."""
@@ -121,8 +172,37 @@ class Replica:
                 return False
             self._load += 1
             self._drained.clear()
-        self._inbox.put(_Work(request, sink, on_done))
+        self._inbox.put(_Work(request, sink, on_done,
+                              session_id=session_id))
         return True
+
+    # -- migration edges (prefill/decode disaggregation, §18) ---------------
+    def reserve(self) -> bool:
+        """Atomically claim one capacity unit for an incoming migration;
+        the unit is consumed by :meth:`submit_reserved` or returned by
+        :meth:`unreserve`. Same admission predicate as ``try_submit``."""
+        with self._lock:
+            if self._closed or not self._accepting or \
+                    self._load >= self.capacity:
+                return False
+            self._load += 1
+            self._drained.clear()
+        return True
+
+    def unreserve(self) -> None:
+        """Return a reservation whose migration fell through."""
+        with self._lock:
+            self._load -= 1
+            if self._load == 0:
+                self._drained.set()
+
+    def submit_reserved(self, work: _Work, emitted: int) -> None:
+        """Enqueue a migrated stream against a held reservation: the
+        request arrives carrying its :class:`KVPayload` (installed by the
+        engine's admission path) and the cursor resumes at ``emitted`` so
+        already-streamed tokens are never re-delivered."""
+        self._inbox.put(_Work(work.request, work.sink, work.on_done,
+                              emitted=emitted, session_id=work.session_id))
 
     def stop_accepting(self) -> None:
         with self._lock:
@@ -176,6 +256,52 @@ class Replica:
                 handles.pop(rid)
                 self._finish(h, None)
 
+    def _try_handoffs(self, handles: Dict[int, _Handle]) -> None:
+        """Prefill role: offer every stream past its first committed
+        token to the handoff hook. On success the request's KV is
+        exported at a commit boundary and the stream (sink, cursor
+        offset, session) moves to the reserved decode replica; on refusal
+        (no decode capacity / strict affinity) the request simply keeps
+        decoding here and is offered again next loop."""
+        if self._handoff is None:
+            return
+        eng = self.engine
+        for rid in list(handles):
+            h = handles[rid]
+            r = h.work.request
+            if h.cursor.closed or not r.output or r.should_stop():
+                continue
+            if r.state is not RequestState.RUNNING:
+                continue
+            target = self._handoff(h.work.session_id)
+            if target is None:
+                continue
+            try:
+                payload = eng.export_request(rid)
+            except (KeyError, ValueError):
+                # raced a finishing/preempting flush — stays local
+                target.unreserve()
+                continue
+            # deliver what the export flush committed before the cursor
+            # offset crosses; then this worker forgets the stream without
+            # counting it served (the decode side finishes it)
+            try:
+                for ev in h.cursor.drain():
+                    h.work.sink(ev)
+            except Exception as e:
+                target.unreserve()
+                handles.pop(rid)
+                self._finish(h, e)
+                continue
+            handles.pop(rid)
+            with self._lock:
+                self._load -= 1
+                self._handed_off += 1
+                if self._load == 0:
+                    self._drained.set()
+            target.submit_reserved(h.work, h.cursor.emitted)
+            assert payload is r.kv_payload   # rides inside the request
+
     def _loop(self) -> None:
         handles: Dict[int, _Handle] = {}
         try:
@@ -217,6 +343,7 @@ class Replica:
             if eng.scheduler.has_work or eng.in_flight:
                 eng.step()
                 self._pump(handles)
+                self._try_handoffs(handles)
             elif handles:
                 # requests whose last token committed on the final step
                 # (or that were submitted and finished instantly)
@@ -238,14 +365,42 @@ class ReplicaFleet:
     workers, and shut them down as a unit."""
 
     def __init__(self, engines: List, capacity: int = 16,
-                 name_prefix: str = "replica"):
+                 name_prefix: str = "replica",
+                 roles: Optional[List[str]] = None):
+        """``roles`` (optional, one per engine — DESIGN.md §18): a mix of
+        ``"prefill"``/``"decode"`` entries builds a disaggregated fleet
+        (a disaggregated fleet needs at least one of each); the default
+        is every replica colocated (``"both"``)."""
         assert engines, "a fleet needs at least one engine"
-        self.replicas = [Replica(f"{name_prefix}{i}", eng, capacity)
-                         for i, eng in enumerate(engines)]
+        roles = list(roles) if roles is not None else ["both"] * len(engines)
+        assert len(roles) == len(engines), "one role per engine"
+        if any(r in ("prefill", "decode") for r in roles):
+            assert "prefill" in roles and "decode" in roles, \
+                "a disaggregated fleet needs >=1 prefill and >=1 decode " \
+                "replica"
+        self.replicas = [Replica(f"{name_prefix}{i}", eng, capacity,
+                                 role=role)
+                         for i, (eng, role) in enumerate(zip(engines, roles))]
         self._closed = False
 
     def __len__(self) -> int:
         return len(self.replicas)
+
+    @property
+    def disaggregated(self) -> bool:
+        return any(r.role in ("prefill", "decode") for r in self.replicas)
+
+    @property
+    def prefill_replicas(self) -> List[Replica]:
+        """Admission targets: prefill-role replicas (disaggregated) or
+        everyone (colocated)."""
+        if not self.disaggregated:
+            return list(self.replicas)
+        return [r for r in self.replicas if r.role == "prefill"]
+
+    @property
+    def decode_replicas(self) -> List[Replica]:
+        return [r for r in self.replicas if r.role == "decode"]
 
     def start(self) -> "ReplicaFleet":
         for r in self.replicas:

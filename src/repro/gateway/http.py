@@ -78,7 +78,10 @@ class GatewayServer:
                  max_tokens_cap: int = 512, trace_window: int = 4096,
                  trace: bool = False):
         self.fleet = fleet
-        self.router = Router(fleet.replicas, retry_after=retry_after)
+        # for_fleet wires disaggregation (§18): prefill-role replicas get
+        # place_decode as their handoff hook; colocated fleets route as
+        # before
+        self.router = Router.for_fleet(fleet, retry_after=retry_after)
         self.codec_pool = CodecPool(get_codec(codec), codec_workers)
         self.max_tokens_cap = max_tokens_cap
         self.traces: deque = deque(maxlen=trace_window)
@@ -213,6 +216,11 @@ class GatewayServer:
                 "served": sum(r.served for r in self.fleet.replicas),
                 "rejected_busy": self.router.rejected_busy,
                 "rejected_draining": self.router.rejected_draining,
+                "disaggregated": self.fleet.disaggregated,
+                # per-replica role/load/free-block/migration counts (§18)
+                # — the router's decisions, debuggable from the outside
+                "replicas": {r.name: r.stats()
+                             for r in self.fleet.replicas},
                 "recent": [t.as_dict() for t in traces[-16:]]}
 
     def _metrics_text(self) -> str:

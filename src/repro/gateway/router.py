@@ -47,16 +47,52 @@ class RouteResult:
 
 class Router:
     def __init__(self, replicas: List[Replica], retry_after: float = 1.0,
-                 max_sessions: int = 4096):
+                 max_sessions: int = 4096,
+                 decode_replicas: Optional[List[Replica]] = None):
+        """``replicas`` are the admission targets. With
+        ``decode_replicas`` set, the router is *disaggregated*
+        (DESIGN.md §18): prompts are admitted least-loaded to the
+        (prefill) ``replicas``, and :meth:`place_decode` — installed as
+        every prefill replica's handoff hook — reserves a decode replica
+        for each request at its first committed token. Session affinity
+        then lives on the DECODE side (it moves with the request: decode
+        replicas hold the long-lived KV state that affinity exists for),
+        and stays strict: a sticky decode replica at capacity refuses the
+        migration, and the request keeps decoding on its prefill replica
+        until the sticky target drains."""
         assert replicas
         self.replicas = list(replicas)
+        self.decode_replicas = list(decode_replicas) if decode_replicas \
+            else None
         self.retry_after = retry_after
         self.max_sessions = max_sessions
+        # session -> index into the affinity pool (decode_replicas when
+        # disaggregated, the admission replicas otherwise)
         self._affinity: "OrderedDict[str, int]" = OrderedDict()
         self._lock = threading.Lock()
         self._accepting = True
         self.rejected_busy = 0
         self.rejected_draining = 0
+
+    @classmethod
+    def for_fleet(cls, fleet, retry_after: float = 1.0,
+                  max_sessions: int = 4096) -> "Router":
+        """Build the router for a fleet and, when the fleet is
+        disaggregated, install :meth:`place_decode` as every prefill
+        replica's handoff hook — the one place admission policy and
+        migration policy are wired together."""
+        router = cls(fleet.prefill_replicas, retry_after=retry_after,
+                     max_sessions=max_sessions,
+                     decode_replicas=fleet.decode_replicas or None)
+        if router.decode_replicas:
+            for r in fleet.prefill_replicas:
+                r.set_handoff(router.place_decode)
+        return router
+
+    @property
+    def _affinity_pool(self) -> List[Replica]:
+        return self.decode_replicas if self.decode_replicas \
+            else self.replicas
 
     @property
     def accepting(self) -> bool:
@@ -71,11 +107,11 @@ class Router:
             idx = self._affinity.get(session_id)
             if idx is not None:
                 self._affinity.move_to_end(session_id)
-                return self.replicas[idx]
+                return self._affinity_pool[idx]
         return None
 
     def _pin(self, session_id: str, replica: Replica) -> None:
-        idx = self.replicas.index(replica)
+        idx = self._affinity_pool.index(replica)
         with self._lock:
             self._affinity[session_id] = idx
             self._affinity.move_to_end(session_id)
@@ -90,10 +126,14 @@ class Router:
         if not self._accepting:
             self.rejected_draining += 1
             return RouteResult("draining", retry_after=self.retry_after)
-        if session_id is not None:
+        if session_id is not None and self.decode_replicas is None:
+            # colocated: affinity binds admission. (Disaggregated skips
+            # this — prefill replicas hold no session state; affinity is
+            # enforced at the decode handoff instead.)
             sticky = self._sticky(session_id)
             if sticky is not None:
-                if sticky.try_submit(request, sink, on_done):
+                if sticky.try_submit(request, sink, on_done,
+                                     session_id=session_id):
                     return RouteResult("ok", sticky)
                 self.rejected_busy += 1
                 return RouteResult("busy", retry_after=self.retry_after)
@@ -103,12 +143,37 @@ class Router:
                        key=lambda i: (self.replicas[i].load, i))
         for i in order:
             r = self.replicas[i]
-            if r.try_submit(request, sink, on_done):
-                if session_id is not None:
+            if r.try_submit(request, sink, on_done, session_id=session_id):
+                if session_id is not None and self.decode_replicas is None:
                     self._pin(session_id, r)
                 return RouteResult("ok", r)
         self.rejected_busy += 1
         return RouteResult("busy", retry_after=self.retry_after)
+
+    def place_decode(self, session_id: Optional[str] = None
+                     ) -> Optional[Replica]:
+        """Reserve a decode-role replica for one migrating request — the
+        prefill replicas' handoff hook (DESIGN.md §18). Strict session
+        affinity moves with the request: a session's first migration pins
+        its decode replica; later migrations for the same session either
+        reserve THAT replica or return None (the request keeps decoding
+        where it is and the handoff is retried — never silently
+        re-homed). Sessionless requests go least-loaded."""
+        if not self.decode_replicas or not self._accepting:
+            return None
+        if session_id is not None:
+            sticky = self._sticky(session_id)
+            if sticky is not None:
+                return sticky if sticky.reserve() else None
+        order = sorted(range(len(self.decode_replicas)),
+                       key=lambda i: (self.decode_replicas[i].load, i))
+        for i in order:
+            r = self.decode_replicas[i]
+            if r.reserve():
+                if session_id is not None:
+                    self._pin(session_id, r)
+                return r
+        return None
 
 
 __all__ = ["Router", "RouteResult"]

@@ -39,15 +39,18 @@ def smoke_model() -> ModelConfig:
                        vocab_size=VOCAB)
 
 
-def smoke_engine(model_seed: int = 0) -> Engine:
+def smoke_engine(model_seed: int = 0, cache: str = "contiguous") -> Engine:
     """One smoke-sized engine; every call with the same ``model_seed``
-    yields identical parameters (the cross-replica identity premise)."""
+    yields identical parameters (the cross-replica identity premise).
+    ``cache="paged"`` exercises the block-pool layout — streams are
+    bit-identical either way (DESIGN.md §9), so the disaggregated smoke
+    migrates real blocks while the reference stays contiguous."""
     cfg = smoke_model()
     params = Model(cfg).init(jax.random.PRNGKey(model_seed))
     return Engine(cfg, params, EngineConfig(
         max_batch=4, max_seq_len=96, algorithm="reference",
         shvs=SHVSConfig(hot_size=VOCAB // 4), k_cap=256,
-        overlap=True, sampler_mode="device"))
+        overlap=True, sampler_mode="device", cache=cache, block_size=16))
 
 
 def _sampling(seed: int) -> SamplingConfig:
@@ -76,11 +79,22 @@ def reference_streams(max_new: int, base_seed: int = 7000) -> dict:
 
 
 async def wire_streams(replicas: int, max_new: int,
-                       base_seed: int = 7000) -> dict:
+                       base_seed: int = 7000,
+                       disaggregate: bool = False) -> dict:
     """The same completions over localhost HTTP/SSE against a live
-    gateway; distinct session ids spread requests across replicas."""
-    fleet = ReplicaFleet([smoke_engine() for _ in range(replicas)],
-                         capacity=4)
+    gateway; distinct session ids spread requests across replicas.
+    ``disaggregate`` splits the fleet into paged prefill/decode roles —
+    every request prefills on one replica and decodes on another, and
+    the wire streams must STILL be bit-identical (DESIGN.md §18)."""
+    if disaggregate:
+        assert replicas >= 2, "--disaggregate needs >= 2 replicas"
+        n_prefill = replicas // 2
+        roles = ["prefill"] * n_prefill + ["decode"] * (replicas - n_prefill)
+        engines = [smoke_engine(cache="paged") for _ in range(replicas)]
+        fleet = ReplicaFleet(engines, capacity=4, roles=roles)
+    else:
+        fleet = ReplicaFleet([smoke_engine() for _ in range(replicas)],
+                             capacity=4)
     gw = GatewayServer(fleet)
     await gw.serve(port=0)
     try:
@@ -91,6 +105,12 @@ async def wire_streams(replicas: int, max_new: int,
                 "repetition_penalty": 1.1, "seed": base_seed + i,
                 "session_id": f"smoke-{i}",
             }) for i, p in enumerate(PROMPTS)])
+        if disaggregate:
+            moved = sum(r.handed_off for r in fleet.prefill_replicas)
+            if moved == 0:
+                raise RuntimeError(
+                    "disaggregated smoke: no request migrated prefill -> "
+                    "decode (handoff path not exercised)")
     finally:
         await gw.shutdown()
     out = {}
@@ -107,10 +127,14 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--replicas", type=int, default=1)
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--disaggregate", action="store_true",
+                    help="split the fleet into prefill/decode roles with "
+                         "paged-KV migration (DESIGN.md §18)")
     args = ap.parse_args(argv)
 
     ref = reference_streams(args.max_new)
-    wire = asyncio.run(wire_streams(args.replicas, args.max_new))
+    wire = asyncio.run(wire_streams(args.replicas, args.max_new,
+                                    disaggregate=args.disaggregate))
     ok = True
     for p in PROMPTS:
         match = wire[p] == ref[p]
@@ -121,9 +145,10 @@ def main(argv=None) -> int:
         print("gateway smoke FAILED: wire streams diverged from "
               "in-process Engine.generate()", file=sys.stderr)
         return 1
+    mode = (f"{args.replicas} replica(s), disaggregated prefill/decode"
+            if args.disaggregate else f"{args.replicas} replica(s)")
     print(f"gateway smoke passed: {len(PROMPTS)} seeded streams over "
-          f"HTTP/SSE ({args.replicas} replica(s)) bit-identical to "
-          f"in-process generation")
+          f"HTTP/SSE ({mode}) bit-identical to in-process generation")
     return 0
 
 

@@ -49,6 +49,13 @@ synthetic batch — every engine flag above still shapes the replicas:
                                 over a replica fleet (Ctrl-C drains)
     --replicas N                engine replicas (identical params: every
                                 replica is built from the same model seed)
+    --disaggregate              split the fleet into prefill-role and
+                                decode-role replicas (DESIGN.md §18):
+                                prompts prefill on one instance and
+                                migrate their paged-KV state to a decode
+                                instance at the first committed token
+    --prefill-replicas N        prefill-role replicas (--disaggregate)
+    --decode-replicas N         decode-role replicas (--disaggregate)
     --http-host / --http-port   bind address (default 127.0.0.1:8100)
     --capacity N                per-replica open-request bound; beyond it
                                 admissions answer 429 + Retry-After
@@ -139,8 +146,26 @@ def synth_requests(n: int, vocab: int, max_new: int, rng_seed: int = 0,
 def build_fleet(args):
     """N identically-parameterized replicas (same model seed → the same
     weights, so seeded streams match across replicas) wrapped in a
-    :class:`~repro.gateway.fleet.ReplicaFleet`."""
+    :class:`~repro.gateway.fleet.ReplicaFleet`.
+
+    With ``--disaggregate`` the fleet is P prefill-role + D decode-role
+    replicas (DESIGN.md §18): ``GatewayServer`` builds its router via
+    ``Router.for_fleet``, which installs the decode-placement hook on
+    every prefill replica, so each admitted prompt prefills on one
+    instance and carries its KV state to a decode instance at the first
+    committed token."""
     from repro.gateway import ReplicaFleet
+    roles = None
+    if args.disaggregate:
+        if args.stages > 1 or args.microbatches:
+            raise ValueError(
+                "--disaggregate needs single-stage engines: the pipeline "
+                "engine shards its KV cache per stage and has no "
+                "migration seam (DESIGN.md §18)")
+        n_prefill = args.prefill_replicas or max(1, args.replicas // 2)
+        n_decode = args.decode_replicas or max(1, args.replicas - n_prefill)
+        roles = ["prefill"] * n_prefill + ["decode"] * n_decode
+    n = len(roles) if roles else args.replicas
     engines = [
         build_engine(args.arch, args.reduced, args.algorithm, args.batch,
                      args.max_seq, overlap=args.overlap,
@@ -150,8 +175,8 @@ def build_fleet(args):
                      samplers=args.samplers, sampler_mode=args.sampler_mode,
                      pool_algorithm=args.pool_algorithm,
                      telemetry=_trace_telemetry(args.trace_out))
-        for _ in range(args.replicas)]
-    return ReplicaFleet(engines, capacity=args.capacity)
+        for _ in range(n)]
+    return ReplicaFleet(engines, capacity=args.capacity, roles=roles)
 
 
 def run_gateway(args) -> None:
@@ -170,8 +195,13 @@ def run_gateway(args) -> None:
         loop = asyncio.get_running_loop()
         for sig in (signal.SIGINT, signal.SIGTERM):
             loop.add_signal_handler(sig, stop.set)
+        if gw.fleet.disaggregated:
+            shape = (f"{len(gw.fleet.prefill_replicas)} prefill + "
+                     f"{len(gw.fleet.decode_replicas)} decode replicas")
+        else:
+            shape = f"{len(gw.fleet.replicas)} replica(s)"
         print(f"gateway listening on http://{gw.host}:{gw.port} "
-              f"({args.replicas} replica(s), capacity {args.capacity}, "
+              f"({shape}, capacity {args.capacity}, "
               f"codec '{args.codec}') — Ctrl-C drains and exits")
         await stop.wait()
         print("draining gateway ...")
@@ -188,6 +218,50 @@ def run_gateway(args) -> None:
                   f"(chrome://tracing / ui.perfetto.dev)")
 
     asyncio.run(_serve())
+
+
+def run_disaggregated_batch(args) -> None:
+    """Non-gateway ``--disaggregate``: drive the synthetic batch through
+    an in-process :class:`~repro.engine.handoff.HandoffScheduler` — one
+    prefill engine, one decode engine, every request migrating its KV
+    state at the first committed token (DESIGN.md §18). Streams stay
+    bit-identical to a single-engine run; this path exists to eyeball
+    migration cost without the HTTP stack."""
+    from repro.engine import HandoffScheduler
+
+    def _one():
+        return build_engine(
+            args.arch, args.reduced, args.algorithm, args.batch,
+            args.max_seq, overlap=args.overlap,
+            prompt_chunk=args.prompt_chunk, cache=args.cache,
+            block_size=args.block_size, num_blocks=args.num_blocks,
+            samplers=args.samplers, sampler_mode=args.sampler_mode,
+            pool_algorithm=args.pool_algorithm,
+            telemetry=_trace_telemetry(args.trace_out))
+
+    stop_sequences = tuple(
+        tuple(int(t) for t in s.split(",") if t.strip()) for s in args.stop)
+    prefill_eng, decode_eng = _one(), _one()
+    hs = HandoffScheduler(prefill_eng, decode_eng)
+    reqs = synth_requests(args.requests, prefill_eng.cfg.vocab_size,
+                          args.max_new, long_prompts=args.long_prompts,
+                          seed=args.seed, greedy=args.greedy,
+                          stop_sequences=stop_sequences)
+    t0 = time.perf_counter()
+    for r in reqs:
+        r.arrival_time = t0
+    n_events = sum(1 for _ in hs.generate(reqs))
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.output) for r in reqs)
+    hs.close()
+    print(f"\nserved {len(reqs)} requests, {toks} tokens in {dt:.2f}s "
+          f"({toks / dt:.1f} tok/s) [disaggregated prefill/decode, "
+          f"{hs.migrated}/{len(reqs)} requests migrated, "
+          f"{n_events} events]")
+    for r in sorted(reqs, key=lambda r: r.request_id):
+        print(f"  req {r.request_id:3d}: {len(r.output):3d} tokens, "
+              f"handoffs={r.handoff_count}, "
+              f"finish_reason={r.finish_reason}")
 
 
 def main() -> None:
@@ -258,6 +332,18 @@ def main() -> None:
                          "(DESIGN.md §16) instead of a synthetic batch")
     ap.add_argument("--replicas", type=int, default=1,
                     help="gateway engine replicas (identical parameters)")
+    ap.add_argument("--disaggregate", action="store_true",
+                    help="prefill/decode disaggregation (DESIGN.md §18): "
+                         "split the fleet into prefill-role and "
+                         "decode-role replicas; each request prefills on "
+                         "one instance and migrates its KV state to a "
+                         "decode instance at the first committed token")
+    ap.add_argument("--prefill-replicas", type=int, default=0,
+                    help="prefill-role replicas under --disaggregate "
+                         "(0 = replicas // 2)")
+    ap.add_argument("--decode-replicas", type=int, default=0,
+                    help="decode-role replicas under --disaggregate "
+                         "(0 = replicas - prefill)")
     ap.add_argument("--http-host", default="127.0.0.1")
     ap.add_argument("--http-port", type=int, default=8100)
     ap.add_argument("--capacity", type=int, default=16,
@@ -275,6 +361,14 @@ def main() -> None:
 
     if args.gateway:
         run_gateway(args)
+        return
+    if args.disaggregate:
+        if args.stages > 1 or args.microbatches:
+            raise ValueError(
+                "--disaggregate needs single-stage engines: the pipeline "
+                "engine shards its KV cache per stage and has no "
+                "migration seam (DESIGN.md §18)")
+        run_disaggregated_batch(args)
         return
 
     stop_sequences = tuple(

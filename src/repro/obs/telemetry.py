@@ -81,6 +81,20 @@ class EngineMetrics:
         self.decisions = m.counter(
             "controller_decisions_total",
             "decision-plane controller actions applied (any knob)")
+        # prefill/decode disaggregation (§18): migration flow + the
+        # router-debuggability gauges behind GET /v1/stats and /metrics
+        self.migrations_out = m.counter(
+            "engine_migrations_out_total",
+            "requests exported with their KV (disaggregation, §18)")
+        self.migrations_in = m.counter(
+            "engine_migrations_in_total",
+            "requests imported with carried KV (disaggregation, §18)")
+        self.free_blocks = m.gauge(
+            "engine_free_kv_blocks",
+            "free blocks in the paged KV pool (-1 = contiguous cache)")
+        self.pending_imports = m.gauge(
+            "engine_pending_imports",
+            "admitted-but-not-installed carried-KV requests")
 
     def observe_step(self, rec: StepRecord) -> None:
         """Fold one committed step's record into the instruments."""

@@ -23,6 +23,10 @@ argument is made of, one kind per seam —
     ``queue_wait``    a request's arrival → admission wait
     ``decision``      a controller action (instant event, §15)
     ``request``       one request's wire-level life on the gateway
+    ``kv_migrate``    one migration's export gather or import scatter
+                      (prefill/decode disaggregation, §18)
+    ``handoff_wait``  export stamp → import install of one migrating
+                      request — the KV's time in flight between engines
 
 Threading: the engine thread, every pool worker thread, and the gateway
 loop record into the same tracer. ``deque.append`` is atomic under the
@@ -51,6 +55,7 @@ from typing import Callable, Iterable, List, NamedTuple, Optional, Tuple
 SPAN_KINDS = frozenset({
     "prefill", "forward", "stage", "d2h_transfer", "host_sample",
     "pool_stall", "commit", "queue_wait", "decision", "request",
+    "kv_migrate", "handoff_wait",
 })
 
 

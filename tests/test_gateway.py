@@ -122,12 +122,24 @@ class FakeReplica:
         self.load = load
         self.admitted = []
 
-    def try_submit(self, request, sink, on_done=None):
+    def try_submit(self, request, sink, on_done=None, session_id=None):
         if self.load >= self.capacity:
             return False
         self.load += 1
         self.admitted.append(request)
         return True
+
+    def reserve(self):
+        if self.load >= self.capacity:
+            return False
+        self.load += 1
+        return True
+
+    def unreserve(self):
+        self.load -= 1
+
+    def set_handoff(self, hook):
+        self.handoff = hook
 
 
 def test_router_least_loaded_choice():

@@ -190,6 +190,73 @@ def test_block_allocator_invariants(data):
         check_invariants()
 
 
+@pytest.mark.disagg
+@given(st.data())
+@settings(max_examples=40, deadline=None)
+def test_block_allocator_migrate_roundtrip_conserves_pools(data):
+    """Export/import round-trips (DESIGN.md §18): ``export_slot`` hands
+    back every owned block exactly once and returns them all to the
+    source free list (no leaks, no double-frees); the importer consumes
+    exactly ``blocks_needed(T)`` fresh blocks on an independent pool, and
+    releasing the landed slot restores that pool too — an arbitrary
+    interleaving of migrations conserves both allocators."""
+    num_blocks = data.draw(st.integers(2, 24))
+    block_size = data.draw(st.sampled_from([1, 2, 4, 16]))
+    batch = data.draw(st.integers(1, 4))
+    pcfg = PagedCacheConfig(block_size=block_size, num_blocks=num_blocks,
+                            max_blocks_per_seq=num_blocks)
+    src, dst = BlockAllocator(pcfg, batch), BlockAllocator(pcfg, batch)
+
+    def check(alloc):
+        live = [b for owned in alloc.owned for b in owned]
+        assert len(live) == len(set(live)), "double-allocated block"
+        assert not set(live) & set(alloc.free), "block both live and free"
+        assert len(live) + len(alloc.free) == num_blocks, "pool leaked"
+
+    lengths = {}
+    for slot in range(batch):
+        target = data.draw(st.integers(0, 3 * block_size))
+        if target == 0:
+            continue
+        try:
+            src.ensure(slot, target)
+            lengths[slot] = target
+        except RuntimeError:
+            pass
+        check(src)
+
+    for slot in data.draw(st.permutations(sorted(lengths))):
+        T = lengths[slot]
+        owned_before = list(src.owned[slot])
+        src_free_before = len(src.free)
+        blocks = src.export_slot(slot)
+        # every owned block handed over exactly once, then freed on the
+        # source: the exporter's pool is whole again for this slot
+        assert blocks == owned_before
+        assert len(blocks) == len(set(blocks))
+        assert len(blocks) == src.blocks_needed(T)
+        assert not src.owned[slot]
+        assert len(src.free) == src_free_before + len(blocks)
+        check(src)
+        # the importer allocates FRESH ids on its own pool — block ids
+        # never travel with the payload
+        dst_free_before = len(dst.free)
+        try:
+            dst.ensure(slot, T)
+        except RuntimeError:
+            check(dst)
+            continue
+        assert len(dst.owned[slot]) == dst.blocks_needed(T)
+        assert len(dst.free) == dst_free_before - dst.blocks_needed(T)
+        check(dst)
+        if data.draw(st.booleans()):        # decode finishes → release
+            dst.release(slot)
+            assert len(dst.free) == dst_free_before
+            check(dst)
+    # after every migration the source pool is fully free again
+    assert sorted(src.free) == list(range(num_blocks))
+
+
 @pytest.mark.pipeline
 @given(st.data())
 @settings(max_examples=40, deadline=None)
